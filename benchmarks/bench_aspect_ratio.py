@@ -1,0 +1,37 @@
+"""A.5 (Fig. 12): high-aspect-ratio rectangles — QPS degrades ~1/alpha while
+recall stays high (elastic-factor decay, not graph failure)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import CubeGraphConfig, CubeGraphIndex
+from repro.core.workloads import ground_truth, make_box_filter, make_dataset
+
+from .common import BENCH_D, BENCH_N, BENCH_Q, csv_row, curve, record
+
+K = 20
+
+
+def run():
+    x, s = make_dataset(BENCH_N, BENCH_D, 2, seed=20)
+    rng = np.random.default_rng(21)
+    q = x[rng.integers(0, BENCH_N, BENCH_Q)] \
+        + 0.05 * rng.normal(size=(BENCH_Q, BENCH_D)).astype(np.float32)
+    idx = CubeGraphIndex.build(x, s, CubeGraphConfig(n_layers=5, m_intra=16,
+                                                     m_cross=4))
+    out = {}
+    for alpha in (1, 4, 16, 32):
+        f = make_box_filter(2, 0.1, seed=22, aspect=float(alpha))
+        gt, _ = ground_truth(x, s, q, f, K)
+        cu = curve(lambda ef: idx.query(q, f, k=K, ef=ef)[0],
+                   (64, 128), q, gt, K)
+        out[f"alpha{alpha}"] = cu
+        best = max(cu, key=lambda r: r["recall"])
+        csv_row(f"a5/alpha{alpha}", best["us_per_query"],
+                f"recall={best['recall']};qps={best['qps']}")
+    record("a5_aspect_ratio", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,38 @@
+"""Exp-8 (Fig. 11): metadata distributions — uniform / normal / clustered /
+skewed / hollow."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import CubeGraphConfig, CubeGraphIndex
+from repro.core.workloads import ground_truth, make_box_filter, make_dataset
+
+from .common import BENCH_D, BENCH_N, BENCH_Q, csv_row, curve, record
+
+K = 20
+
+
+def run():
+    out = {}
+    rng = np.random.default_rng(17)
+    for dist in ("uniform", "normal", "clustered", "skewed", "hollow"):
+        x, s = make_dataset(BENCH_N, BENCH_D, 2, distribution=dist, seed=18)
+        q = x[rng.integers(0, BENCH_N, BENCH_Q)] \
+            + 0.05 * rng.normal(size=(BENCH_Q, BENCH_D)).astype(np.float32)
+        idx = CubeGraphIndex.build(x, s, CubeGraphConfig(
+            n_layers=5, m_intra=16, m_cross=4))
+        for ratio in (0.05, 0.10):
+            f = make_box_filter(2, ratio, seed=19 + int(ratio * 100))
+            gt, _ = ground_truth(x, s, q, f, K)
+            cu = curve(lambda ef: idx.query(q, f, k=K, ef=ef)[0],
+                       (32, 64, 128), q, gt, K)
+            out[f"{dist}_r{ratio}"] = cu
+            best = max(cu, key=lambda r: r["recall"])
+            csv_row(f"exp8/{dist}/r{ratio}", best["us_per_query"],
+                    f"recall={best['recall']};qps={best['qps']}")
+    record("exp8_distributions", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

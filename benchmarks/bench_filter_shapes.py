@@ -1,0 +1,49 @@
+"""Exp-3 (Fig. 7): complex filter shapes — box vs polygon-3/4/5 vs radius vs
+composed (box-minus-circle)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import CubeGraphConfig, CubeGraphIndex
+from repro.core.workloads import (ground_truth, make_ball_filter,
+                                  make_box_filter, make_compose_filter,
+                                  make_dataset, make_polygon_filter)
+
+from .common import BENCH_D, BENCH_N, BENCH_Q, csv_row, curve, record
+
+EFS = (32, 64, 128)
+K = 20
+
+
+def run():
+    x, s = make_dataset(BENCH_N, BENCH_D, 2, seed=5)
+    rng = np.random.default_rng(6)
+    q = x[rng.integers(0, BENCH_N, BENCH_Q)] \
+        + 0.05 * rng.normal(size=(BENCH_Q, BENCH_D)).astype(np.float32)
+    idx = CubeGraphIndex.build(x, s, CubeGraphConfig(n_layers=5, m_intra=16,
+                                                     m_cross=4))
+    shapes = {
+        "box": lambda r, sd: make_box_filter(2, r, seed=sd),
+        "polygon3": lambda r, sd: make_polygon_filter(2, r, 3, seed=sd),
+        "polygon4": lambda r, sd: make_polygon_filter(2, r, 4, seed=sd),
+        "polygon5": lambda r, sd: make_polygon_filter(2, r, 5, seed=sd),
+        "radius": lambda r, sd: make_ball_filter(2, r, seed=sd),
+        "compose": lambda r, sd: make_compose_filter(2, r, seed=sd),
+    }
+    out = {}
+    for ratio in (0.05, 0.10):
+        for name, mk in shapes.items():
+            f = mk(ratio, int(ratio * 100) + 7)
+            gt, _ = ground_truth(x, s, q, f, K)
+            cu = curve(lambda ef: idx.query(q, f, k=K, ef=ef)[0],
+                       EFS, q, gt, K)
+            out[f"{name}_r{ratio}"] = cu
+            best = max(cu, key=lambda r_: r_["recall"])
+            csv_row(f"exp3/{name}/r{ratio}", best["us_per_query"],
+                    f"recall={best['recall']};qps={best['qps']}")
+    record("exp3_filter_shapes", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

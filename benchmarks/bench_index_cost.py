@@ -1,0 +1,37 @@
+"""Exp-4 (Tables 5/6): index construction time and size."""
+from __future__ import annotations
+
+from repro.core import CubeGraphConfig, CubeGraphIndex
+from repro.core.baselines import (AcornIndex, PostFilteringIndex,
+                                  TreeGraphIndex)
+from repro.core.workloads import make_dataset
+
+from .common import BENCH_D, BENCH_N, csv_row, record
+
+
+def run():
+    x, s = make_dataset(BENCH_N, BENCH_D, 2, seed=8)
+    out = {}
+    builders = {
+        "cubegraph": lambda: CubeGraphIndex.build(
+            x, s, CubeGraphConfig(n_layers=5, m_intra=16, m_cross=4)),
+        "postfilter(hnsw-like)": lambda: PostFilteringIndex(x, s, m_intra=16),
+        "acorn-g12": lambda: AcornIndex(x, s, m_intra=16, gamma=12),
+        "treegraph": lambda: TreeGraphIndex(
+            x, s, leaf_size=max(BENCH_N // 32, 128), m_intra=16),
+    }
+    vector_mb = x.size * 4 / 1e6
+    for name, build in builders.items():
+        idx = build()
+        secs = idx.build_seconds
+        mb = idx.index_bytes() / 1e6
+        out[name] = {"build_s": round(secs, 2), "index_MB": round(mb, 2),
+                     "vector_MB": round(vector_mb, 2)}
+        csv_row(f"exp4/{name}", secs * 1e6,
+                f"build_s={secs:.1f};index_MB={mb:.1f}")
+    record("exp4_index_cost", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,49 @@
+"""Kernel microbenchmarks: fused filtered-topk Pallas kernel vs unfused jnp
+reference (interpret mode on CPU — wall times indicative only; the BlockSpec
+tiling targets TPU VMEM)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.workloads import make_box_filter, make_dataset
+from repro.kernels import filtered_topk
+from repro.kernels.ref import filtered_topk_ref
+from repro.kernels.ops import encode_filter
+
+from .common import csv_row, record
+
+
+def run():
+    out = {}
+    for (bq, n, d) in ((32, 4096, 128), (64, 8192, 64)):
+        x, s = make_dataset(n, d, 2, seed=26)
+        q = x[:bq] + 0.01
+        f = make_box_filter(2, 0.1, seed=27)
+        kind, params = encode_filter(f, 2)
+
+        def kern():
+            ids, dd = filtered_topk(q, x, s, f, 10)
+            return np.asarray(ids)
+
+        def ref():
+            dd, ids = filtered_topk_ref(q, x, s, kind, params, 10)
+            return np.asarray(ids)
+
+        for name, fn in (("pallas_interp", kern), ("jnp_ref", ref)):
+            fn()
+            t0 = time.perf_counter()
+            for _ in range(3):
+                r = fn()
+            dt = (time.perf_counter() - t0) / 3
+            out[f"{name}_b{bq}_n{n}_d{d}"] = round(dt * 1e6, 1)
+            csv_row(f"kernels/{name}/b{bq}n{n}d{d}", dt * 1e6,
+                    f"us={dt*1e6:.0f}")
+    record("kernel_microbench", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

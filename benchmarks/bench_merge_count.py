@@ -1,0 +1,42 @@
+"""Exp-6 (Fig. 9): impact of merged-cube count — the same filter executed at
+finer layers forces 4 / 16 / 64 / 128-cube merges; recall/QPS degrade with
+merge count (validates Prop. 1 layer selection)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import CubeGraphConfig, CubeGraphIndex
+from repro.core.workloads import (ground_truth, make_box_filter, make_dataset)
+
+from .common import BENCH_D, BENCH_N, BENCH_Q, csv_row, curve, record
+
+EFS = (32, 64, 128)
+K = 20
+
+
+def run():
+    x, s = make_dataset(BENCH_N, BENCH_D, 2, seed=12)
+    rng = np.random.default_rng(13)
+    q = x[rng.integers(0, BENCH_N, BENCH_Q)] \
+        + 0.05 * rng.normal(size=(BENCH_Q, BENCH_D)).astype(np.float32)
+    idx = CubeGraphIndex.build(x, s, CubeGraphConfig(n_layers=6, m_intra=16,
+                                                     m_cross=4))
+    # a ~0.25-side box: layer l covers it with ~(0.25 * 2^{l+1})^2 cubes
+    f = make_box_filter(2, 0.0625, seed=14)     # side ~0.25
+    gt, _ = ground_truth(x, s, q, f, K)
+    out = {}
+    for layer in range(idx.n_built_layers):
+        ids, _, st = idx.query(q, f, k=K, ef=64, layer=layer,
+                               return_stats=True)
+        cu = curve(lambda ef: idx.query(q, f, k=K, ef=ef, layer=layer)[0],
+                   EFS, q, gt, K)
+        out[f"layer{layer}_merge{st.n_active_cubes}"] = cu
+        best = max(cu, key=lambda r: r["recall"])
+        csv_row(f"exp6/merge{st.n_active_cubes}", best["us_per_query"],
+                f"recall={best['recall']};qps={best['qps']}")
+    record("exp6_merge_count", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,38 @@
+"""A.6 (Fig. 13): Cube-Merge (predetermined, Alg. 3) vs Fly-Merge
+(on-the-fly, Alg. 4) on identical box filters."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import CubeGraphConfig, CubeGraphIndex
+from repro.core.workloads import ground_truth, make_box_filter, make_dataset
+
+from .common import BENCH_D, BENCH_N, BENCH_Q, csv_row, curve, record
+
+K = 20
+
+
+def run():
+    x, s = make_dataset(BENCH_N, BENCH_D, 2, seed=23)
+    rng = np.random.default_rng(24)
+    q = x[rng.integers(0, BENCH_N, BENCH_Q)] \
+        + 0.05 * rng.normal(size=(BENCH_Q, BENCH_D)).astype(np.float32)
+    idx = CubeGraphIndex.build(x, s, CubeGraphConfig(n_layers=5, m_intra=16,
+                                                     m_cross=4))
+    out = {}
+    for ratio in (0.05, 0.10):
+        f = make_box_filter(2, ratio, seed=25)
+        gt, _ = ground_truth(x, s, q, f, K)
+        for mode in ("predetermined", "onthefly"):
+            cu = curve(lambda ef: idx.query(q, f, k=K, ef=ef, mode=mode)[0],
+                       (32, 64, 128), q, gt, K)
+            out[f"{mode}_r{ratio}"] = cu
+            best = max(cu, key=lambda r: r["recall"])
+            csv_row(f"a6/{mode}/r{ratio}", best["us_per_query"],
+                    f"recall={best['recall']};qps={best['qps']}")
+    record("a6_merge_strategy", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,38 @@
+"""Exp-2 (Fig. 6): multi-dimensional filters (2D / 3D / 4D boxes)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import CubeGraphConfig, CubeGraphIndex
+from repro.core.workloads import ground_truth, make_box_filter, make_dataset
+
+from .common import BENCH_D, BENCH_N, BENCH_Q, csv_row, curve, record
+
+EFS = (32, 64, 128)
+K = 20
+
+
+def run():
+    out = {}
+    rng = np.random.default_rng(3)
+    for m in (2, 3, 4):
+        x, s = make_dataset(BENCH_N, BENCH_D, m, seed=m)
+        q = x[rng.integers(0, BENCH_N, BENCH_Q)] \
+            + 0.05 * rng.normal(size=(BENCH_Q, BENCH_D)).astype(np.float32)
+        idx = CubeGraphIndex.build(x, s, CubeGraphConfig(
+            n_layers=5 if m == 2 else 4, m_intra=16, m_cross=4))
+        for ratio in (0.05, 0.10):
+            f = make_box_filter(m, ratio, seed=m * 10 + int(ratio * 100))
+            gt, _ = ground_truth(x, s, q, f, K)
+            cu = curve(lambda ef: idx.query(q, f, k=K, ef=ef)[0],
+                       EFS, q, gt, K)
+            out[f"m{m}_r{ratio}"] = cu
+            best = max(cu, key=lambda r: r["recall"])
+            csv_row(f"exp2/m{m}/r{ratio}", best["us_per_query"],
+                    f"recall={best['recall']};qps={best['qps']}")
+    record("exp2_multidim", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,37 @@
+"""Exp-7 (Fig. 10): scalability — build time and query efficiency vs N."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import CubeGraphConfig, CubeGraphIndex
+from repro.core.workloads import ground_truth, make_box_filter, make_dataset
+
+from .common import BENCH_D, BENCH_N, BENCH_Q, csv_row, curve, record
+
+K = 20
+
+
+def run():
+    out = {}
+    rng = np.random.default_rng(15)
+    for n in (BENCH_N // 4, BENCH_N // 2, BENCH_N, BENCH_N * 2):
+        x, s = make_dataset(n, BENCH_D, 2, seed=n)
+        q = x[rng.integers(0, n, BENCH_Q)] \
+            + 0.05 * rng.normal(size=(BENCH_Q, BENCH_D)).astype(np.float32)
+        idx = CubeGraphIndex.build(x, s, CubeGraphConfig(
+            n_layers=5, m_intra=16, m_cross=4))
+        f = make_box_filter(2, 0.05, seed=16)
+        gt, _ = ground_truth(x, s, q, f, K)
+        cu = curve(lambda ef: idx.query(q, f, k=K, ef=ef)[0],
+                   (64, 128), q, gt, K)
+        best = max(cu, key=lambda r: r["recall"])
+        out[f"n{n}"] = {"build_s": round(idx.build_seconds, 2), "curve": cu}
+        csv_row(f"exp7/n{n}", best["us_per_query"],
+                f"recall={best['recall']};qps={best['qps']};"
+                f"build_s={idx.build_seconds:.1f}")
+    record("exp7_scalability", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

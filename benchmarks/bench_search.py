@@ -1,0 +1,57 @@
+"""Exp-1 (Fig. 5): search efficiency — CubeGraph vs PostFiltering / ACORN /
+PreFiltering / TreeGraph, box filters, recall@20 vs QPS across filter ratios."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import CubeGraphConfig, CubeGraphIndex
+from repro.core.baselines import (AcornIndex, PostFilteringIndex,
+                                  PreFilteringIndex, TreeGraphIndex)
+from repro.core.workloads import (ground_truth, make_box_filter, make_dataset)
+
+from .common import BENCH_D, BENCH_N, BENCH_Q, csv_row, curve, record
+
+EFS = (16, 32, 64, 128)
+RATIOS = (0.01, 0.05, 0.10)
+K = 20
+
+
+def run():
+    x, s = make_dataset(BENCH_N, BENCH_D, 2, seed=1)
+    rng = np.random.default_rng(2)
+    q = x[rng.integers(0, BENCH_N, BENCH_Q)] \
+        + 0.05 * rng.normal(size=(BENCH_Q, BENCH_D)).astype(np.float32)
+
+    cg = CubeGraphIndex.build(x, s, CubeGraphConfig(n_layers=5, m_intra=16,
+                                                    m_cross=4))
+    post = PostFilteringIndex(x, s, m_intra=16)
+    pre = PreFilteringIndex(x, s, m_intra=16)
+    acorn = AcornIndex(x, s, m_intra=16, gamma=12)
+    tree = TreeGraphIndex(x, s, leaf_size=max(BENCH_N // 32, 128), m_intra=16)
+
+    out = {}
+    for ratio in RATIOS:
+        f = make_box_filter(2, ratio, seed=int(ratio * 1000))
+        gt, _ = ground_truth(x, s, q, f, K)
+        res = {}
+        res["cubegraph"] = curve(
+            lambda ef: cg.query(q, f, k=K, ef=ef)[0], EFS, q, gt, K)
+        res["postfilter"] = curve(
+            lambda ef: post.query(q, f, k=K, ef=ef)[0], EFS, q, gt, K)
+        res["prefilter"] = curve(
+            lambda ef: pre.query(q, f, k=K, ef=ef)[0], EFS, q, gt, K)
+        res["acorn"] = curve(
+            lambda ef: acorn.query(q, f, k=K, ef=ef)[0], EFS, q, gt, K)
+        res["treegraph"] = curve(
+            lambda ef: tree.query(q, f, k=K, ef=ef)[0], EFS, q, gt, K)
+        out[f"ratio_{ratio}"] = res
+        for name, cu in res.items():
+            best = max(cu, key=lambda r: r["recall"])
+            csv_row(f"exp1/{name}/r{ratio}", best["us_per_query"],
+                    f"recall={best['recall']};qps={best['qps']}")
+    record("exp1_search_efficiency", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Exp-5 (Fig. 8): incremental update vs rebuild-from-scratch."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import CubeGraphConfig, CubeGraphIndex
+from repro.core.workloads import (ground_truth, make_box_filter, make_dataset,
+                                  recall)
+
+from .common import BENCH_D, BENCH_N, BENCH_Q, csv_row, record
+
+CFG = CubeGraphConfig(n_layers=4, m_intra=12, m_cross=4)
+
+
+def run():
+    n = max(BENCH_N // 2, 4000)
+    x, s = make_dataset(n + n // 2, BENCH_D, 2, seed=9)
+    rng = np.random.default_rng(10)
+    q = x[rng.integers(0, n, BENCH_Q)] \
+        + 0.05 * rng.normal(size=(BENCH_Q, BENCH_D)).astype(np.float32)
+    f = make_box_filter(2, 0.05, seed=11)
+    out = {}
+    for frac in (0.1, 0.3, 0.5):
+        n_add = int(n * frac)
+        base = CubeGraphIndex.build(x[:n], s[:n], CFG)
+        t0 = time.perf_counter()
+        base.insert_batch(x[n:n + n_add], s[n:n + n_add])
+        t_inc = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        rebuilt = CubeGraphIndex.build(x[:n + n_add], s[:n + n_add], CFG)
+        t_full = time.perf_counter() - t0
+        gt, _ = ground_truth(x[:n + n_add], s[:n + n_add], q, f, 10)
+        r_inc = recall(base.query(q, f, k=10, ef=96)[0], gt)
+        r_full = recall(rebuilt.query(q, f, k=10, ef=96)[0], gt)
+        out[f"frac_{frac}"] = {
+            "incremental_s": round(t_inc, 2), "rebuild_s": round(t_full, 2),
+            "speedup": round(t_full / max(t_inc, 1e-9), 2),
+            "recall_incremental": round(r_inc, 4),
+            "recall_rebuild": round(r_full, 4)}
+        csv_row(f"exp5/update_{int(frac*100)}pct", t_inc * 1e6,
+                f"speedup={out[f'frac_{frac}']['speedup']}x;"
+                f"recall={r_inc:.3f}")
+    record("exp5_dynamic_updates", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

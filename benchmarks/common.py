@@ -1,0 +1,74 @@
+"""Shared benchmark harness.
+
+CPU-scaled reproduction of the paper's experiment grid: absolute QPS numbers
+are container-specific; the *relative orderings and trends* are the
+reproduction targets (see DESIGN.md §4).  Scale knobs via env:
+REPRO_BENCH_N (default 10000), REPRO_BENCH_Q (default 32).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict, List, Sequence
+
+import numpy as np
+
+BENCH_N = int(os.environ.get("REPRO_BENCH_N", 10_000))
+BENCH_Q = int(os.environ.get("REPRO_BENCH_Q", 32))
+BENCH_D = int(os.environ.get("REPRO_BENCH_D", 32))
+RESULTS_PATH = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                            "bench_results.json")
+
+
+def timed_queries(fn: Callable[[], np.ndarray], reps: int = 3):
+    """(mean seconds per call, result of last call) with one warmup."""
+    fn()                                   # warmup (jit compile)
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(reps):
+        out = fn()
+    dt = (time.perf_counter() - t0) / reps
+    return dt, out
+
+
+def qps(batch: int, seconds: float) -> float:
+    return batch / max(seconds, 1e-9)
+
+
+def curve(query_fn, efs: Sequence[int], queries, gt, k: int = 20,
+          reps: int = 3) -> List[Dict]:
+    """query_fn(ef) -> ids.  Returns [{ef, recall, qps, us_per_query}]."""
+    from repro.core.workloads import recall as recall_fn
+    out = []
+    for ef in efs:
+        dt, ids = timed_queries(lambda e=ef: query_fn(e), reps)
+        out.append({"ef": ef, "recall": round(recall_fn(ids, gt), 4),
+                    "qps": round(qps(len(queries), dt), 1),
+                    "us_per_query": round(dt / len(queries) * 1e6, 1)})
+    return out
+
+
+_ALL_RESULTS: Dict[str, object] = {}
+
+
+def record(section: str, payload):
+    _ALL_RESULTS[section] = payload
+
+
+def flush_results():
+    os.makedirs(os.path.dirname(RESULTS_PATH), exist_ok=True)
+    existing = {}
+    if os.path.exists(RESULTS_PATH):
+        try:
+            existing = json.load(open(RESULTS_PATH))
+        except json.JSONDecodeError:
+            existing = {}
+    existing.update(_ALL_RESULTS)
+    with open(RESULTS_PATH, "w") as f:
+        json.dump(existing, f, indent=1)
+    return RESULTS_PATH
+
+
+def csv_row(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,63 @@
+"""Inject the generated roofline + perf tables into EXPERIMENTS.md
+(replaces the <!-- ROOFLINE_TABLE --> / <!-- PERF_TABLE --> markers)."""
+from __future__ import annotations
+
+import glob
+import io
+import json
+import os
+import sys
+from contextlib import redirect_stdout
+
+HERE = os.path.dirname(__file__)
+EXP = os.path.join(HERE, "..", "EXPERIMENTS.md")
+PERF_DIR = os.path.join(HERE, "..", "experiments", "perf")
+
+
+def roofline_markdown() -> str:
+    from .roofline import load_cells, fmt_row, HEADER
+    cells = load_cells("pod1")
+    buf = ["| " + " | ".join(HEADER) + " |", "|" + "---|" * len(HEADER)]
+    for r in cells:
+        buf.append("| " + " | ".join(str(c) for c in fmt_row(r)) + " |")
+    ok = sum(1 for r in cells if r["status"] == "ok")
+    skip = sum(1 for r in cells if r["status"] == "skipped")
+    buf.append("")
+    buf.append(f"*{len(cells)} pod1 cells: {ok} ok, {skip} skipped, "
+               f"{len(cells)-ok-skip} error.  pod2 (512-chip) compile+memory "
+               "evidence in `experiments/dryrun/*__pod2.json`.*")
+    return "\n".join(buf)
+
+
+def perf_markdown() -> str:
+    rows = ["| cell | variant | peak GB | fits | compute_s | memory_s | "
+            "collective_s | bottleneck | useful |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for path in sorted(glob.glob(os.path.join(PERF_DIR, "*.json"))):
+        r = json.load(open(path))
+        m = r["full"]["memory"]
+        ro = r.get("roofline", {})
+        rows.append(
+            f"| {r['arch']}/{r['shape']}/{r['mesh']} | {r['variant']}"
+            f"{'+accum'+str(r['accum']) if r.get('accum',1)>1 else ''} | "
+            f"{m['peak_per_device_bytes']/1e9:.1f} | "
+            f"{'Y' if m['fits_hbm'] else 'N'} | "
+            f"{ro.get('compute_s', float('nan')):.3f} | "
+            f"{ro.get('memory_s', float('nan')):.3f} | "
+            f"{ro.get('collective_s', float('nan')):.3f} | "
+            f"{ro.get('bottleneck','-')} | {ro.get('useful_ratio',0):.2f} |")
+    if len(rows) == 2:
+        return "*(no perf variants recorded yet)*"
+    return "\n".join(rows)
+
+
+def main():
+    src = open(EXP).read()
+    src = src.replace("<!-- ROOFLINE_TABLE -->", roofline_markdown())
+    src = src.replace("<!-- PERF_TABLE -->", perf_markdown())
+    open(EXP, "w").write(src)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

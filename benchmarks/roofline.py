@@ -1,0 +1,80 @@
+"""§Roofline table generator: aggregates experiments/dryrun/*.json into the
+per-(arch x shape x mesh) roofline table for EXPERIMENTS.md.
+
+  PYTHONPATH=src python -m benchmarks.roofline [--mesh pod1] [--markdown]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_cells(mesh: str = ""):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        rec = json.load(open(path))
+        if mesh and rec.get("mesh") != mesh:
+            continue
+        cells.append(rec)
+    return cells
+
+
+def fmt_row(rec):
+    arch, shape, mesh = rec["arch"], rec["shape"], rec["mesh"]
+    if rec["status"] == "skipped":
+        return [arch, shape, mesh, "SKIP", "-", "-", "-", "-", "-", "-",
+                rec.get("reason", "")[:48]]
+    if rec["status"] != "ok":
+        return [arch, shape, mesh, "ERR", "-", "-", "-", "-", "-", "-",
+                rec.get("error", "")[:48]]
+    ro = rec.get("roofline", {})
+    m = rec["full"]["memory"]
+    note = ""
+    if rec.get("accum"):
+        note = f"accum={rec['accum'][-1]['accum']}"
+    dom = ro.get("bottleneck", "?")
+    terms = [ro.get("compute_s", 0), ro.get("memory_s", 0),
+             ro.get("collective_s", 0)]
+    frac = (ro.get("compute_s", 0) / max(max(terms), 1e-12))
+    return [arch, shape, mesh, "ok",
+            f"{ro.get('compute_s', 0):.3f}", f"{ro.get('memory_s', 0):.3f}",
+            f"{ro.get('collective_s', 0):.3f}", dom,
+            f"{frac:.2f}", f"{ro.get('useful_ratio', 0):.2f}",
+            f"peak={m['peak_per_device_bytes']/1e9:.1f}GB "
+            f"fits={'Y' if m['fits_hbm'] else 'N'} {note}"]
+
+
+HEADER = ["arch", "shape", "mesh", "status", "compute_s", "memory_s",
+          "collective_s", "bottleneck", "roofline_frac", "useful_ratio",
+          "memory/notes"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    cells = load_cells(args.mesh)
+    rows = [fmt_row(r) for r in cells]
+    if args.markdown:
+        print("| " + " | ".join(HEADER) + " |")
+        print("|" + "---|" * len(HEADER))
+        for r in rows:
+            print("| " + " | ".join(str(c) for c in r) + " |")
+    else:
+        print(",".join(HEADER))
+        for r in rows:
+            print(",".join(str(c) for c in r))
+    ok = sum(1 for r in cells if r["status"] == "ok")
+    skip = sum(1 for r in cells if r["status"] == "skipped")
+    err = len(cells) - ok - skip
+    print(f"# {len(cells)} cells: {ok} ok, {skip} skipped, {err} error")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Benchmark driver: one section per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV and writes
+experiments/bench_results.json."""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from . import (bench_aspect_ratio, bench_distributions,
+                   bench_filter_shapes, bench_index_cost, bench_kernels,
+                   bench_merge_count, bench_merge_strategy, bench_multidim,
+                   bench_scalability, bench_search, bench_updates)
+    from .common import flush_results
+
+    sections = [
+        ("exp1_search_efficiency", bench_search),
+        ("exp2_multidim", bench_multidim),
+        ("exp3_filter_shapes", bench_filter_shapes),
+        ("exp4_index_cost", bench_index_cost),
+        ("exp5_dynamic_updates", bench_updates),
+        ("exp6_merge_count", bench_merge_count),
+        ("exp7_scalability", bench_scalability),
+        ("exp8_distributions", bench_distributions),
+        ("a5_aspect_ratio", bench_aspect_ratio),
+        ("a6_merge_strategy", bench_merge_strategy),
+        ("kernels", bench_kernels),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for name, mod in sections:
+        if only and only not in name:
+            continue
+        t0 = time.time()
+        try:
+            mod.run()
+        except Exception as e:  # noqa: BLE001 — keep the suite going
+            print(f"{name},0,ERROR={type(e).__name__}:{e}")
+        print(f"# section {name} took {time.time()-t0:.1f}s", flush=True)
+    path = flush_results()
+    print(f"# results written to {path}")
+
+
+if __name__ == "__main__":
+    main()

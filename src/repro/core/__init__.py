@@ -1,0 +1,16 @@
+"""CubeGraph core: the paper's primary contribution in JAX.
+
+Hierarchical-grid stitched-graph index for hybrid AKNN queries with
+arbitrary spatio-temporal filters (boxes, balls, polygons, compositions),
+plus the paper's baselines (PostFiltering / PreFiltering / ACORN / TreeGraph).
+"""
+from .cubegraph import CubeGraphConfig, CubeGraphIndex
+from .filters import BallFilter, BoxFilter, ComposeFilter, Filter, PolygonFilter
+from .grid import GridSpec, Layer
+from .search import SearchParams, beam_search
+
+__all__ = [
+    "CubeGraphConfig", "CubeGraphIndex",
+    "BallFilter", "BoxFilter", "ComposeFilter", "Filter", "PolygonFilter",
+    "GridSpec", "Layer", "SearchParams", "beam_search",
+]

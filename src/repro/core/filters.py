@@ -1,0 +1,175 @@
+"""Spatio-temporal filter predicates φ : R^m -> {0,1} (paper §2.1).
+
+Filters are JAX pytrees: their parameters are arrays (traced inside jitted
+search loops) while their *type* is static — each filter class gets its own
+specialization of the search kernel, mirroring the paper's "predicate applied
+during node traversal" with the metadata gathered alongside the node block
+(Fig. 3 alignment).
+
+Supported shapes (paper §6.1 query workloads): axis-aligned boxes, circles /
+balls, simple polygons (2D, over metadata dims 0-1, with optional box bounds on
+the remaining dims), and boolean compositions (e.g. "inside box but outside
+circle").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["BoxFilter", "BallFilter", "PolygonFilter", "ComposeFilter", "Filter"]
+
+
+class Filter:
+    """Base class (interface only)."""
+
+    def contains(self, s: jnp.ndarray) -> jnp.ndarray:   # [n, m] -> bool [n]
+        raise NotImplementedError
+
+    def bounding_box(self) -> Tuple[np.ndarray, np.ndarray]:
+        raise NotImplementedError
+
+    def characteristic_length(self) -> float:
+        """Paper §5.1: max side length for boxes/hulls, diameter for balls."""
+        lo, hi = self.bounding_box()
+        return float(np.max(np.asarray(hi) - np.asarray(lo)))
+
+
+def _register(cls, fields):
+    jax.tree_util.register_pytree_node(
+        cls,
+        lambda f: (tuple(getattr(f, n) for n in fields), None),
+        lambda aux, ch: cls(*ch),
+    )
+    return cls
+
+
+@dataclasses.dataclass(frozen=True)
+class BoxFilter(Filter):
+    """Axis-aligned box [lo, hi] over all m metadata dims."""
+
+    lo: jnp.ndarray   # [m]
+    hi: jnp.ndarray   # [m]
+
+    def contains(self, s):
+        s = jnp.asarray(s)
+        return jnp.all((s >= self.lo) & (s <= self.hi), axis=-1)
+
+    def bounding_box(self):
+        return np.asarray(self.lo), np.asarray(self.hi)
+
+
+@dataclasses.dataclass(frozen=True)
+class BallFilter(Filter):
+    """Euclidean ball over the first ``ndim(center)`` metadata dims."""
+
+    center: jnp.ndarray   # [mc] — ball applies to dims [0, mc)
+    radius: jnp.ndarray   # scalar
+
+    def contains(self, s):
+        s = jnp.asarray(s)
+        mc = self.center.shape[-1]
+        d2 = jnp.sum((s[..., :mc] - self.center) ** 2, axis=-1)
+        return d2 <= self.radius ** 2
+
+    def bounding_box(self):
+        c = np.asarray(self.center)
+        r = float(np.asarray(self.radius))
+        return c - r, c + r
+
+    def characteristic_length(self):
+        return 2.0 * float(np.asarray(self.radius))
+
+
+@dataclasses.dataclass(frozen=True)
+class PolygonFilter(Filter):
+    """Simple polygon over metadata dims (0, 1); optional box on higher dims.
+
+    Point-in-polygon by the crossing-number (ray casting) rule, fully
+    vectorized over both points and edges so it can run inside the search loop
+    (and inside the Pallas filtered-scan kernel's jnp fallback).
+    """
+
+    vertices: jnp.ndarray     # [k, 2] polygon vertices in order
+    rest_lo: jnp.ndarray      # [m-2] box bounds on remaining dims (may be empty)
+    rest_hi: jnp.ndarray      # [m-2]
+
+    def contains(self, s):
+        s = jnp.asarray(s)
+        x, y = s[..., 0], s[..., 1]
+        vx, vy = self.vertices[:, 0], self.vertices[:, 1]
+        wx, wy = jnp.roll(vx, -1), jnp.roll(vy, -1)
+        # Edge (v -> w) crosses the horizontal ray from (x, y) going +x?
+        x_, y_ = x[..., None], y[..., None]
+        cond = (vy[None] > y_) != (wy[None] > y_)
+        # x coordinate of the edge at height y
+        t = (y_ - vy[None]) / jnp.where(wy[None] == vy[None], 1.0, wy[None] - vy[None])
+        xint = vx[None] + t * (wx[None] - vx[None])
+        crossings = jnp.sum(cond & (x_ < xint), axis=-1)
+        inside = (crossings % 2) == 1
+        if self.rest_lo.shape[-1] > 0:
+            rest = s[..., 2:]
+            inside = inside & jnp.all((rest >= self.rest_lo) & (rest <= self.rest_hi), axis=-1)
+        return inside
+
+    def bounding_box(self):
+        v = np.asarray(self.vertices)
+        lo2, hi2 = v.min(axis=0), v.max(axis=0)
+        lo = np.concatenate([lo2, np.asarray(self.rest_lo)])
+        hi = np.concatenate([hi2, np.asarray(self.rest_hi)])
+        return lo, hi
+
+
+@dataclasses.dataclass(frozen=True)
+class ComposeFilter(Filter):
+    """Boolean composition of two filters. op is static ('and'|'or'|'andnot')."""
+
+    a: Filter
+    b: Filter
+    op: str = "and"
+
+    def contains(self, s):
+        ca, cb = self.a.contains(s), self.b.contains(s)
+        if self.op == "and":
+            return ca & cb
+        if self.op == "or":
+            return ca | cb
+        if self.op == "andnot":
+            return ca & ~cb
+        raise ValueError(f"unknown op {self.op!r}")
+
+    def bounding_box(self):
+        alo, ahi = self.a.bounding_box()
+        blo, bhi = self.b.bounding_box()
+        # sub-filters may constrain different dimension prefixes (e.g. a 2D
+        # geo ball AND a 3D box with a time window): pad the shorter bounds
+        # to "unconstrained" before combining.
+        m = max(len(alo), len(blo))
+
+        def pad(lo, hi):
+            k = m - len(lo)
+            if k:
+                lo = np.concatenate([lo, np.full(k, -1e18)])
+                hi = np.concatenate([hi, np.full(k, 1e18)])
+            return lo, hi
+
+        alo, ahi = pad(np.asarray(alo), np.asarray(ahi))
+        blo, bhi = pad(np.asarray(blo), np.asarray(bhi))
+        if self.op == "or":
+            return np.minimum(alo, blo), np.maximum(ahi, bhi)
+        if self.op == "and":
+            return np.maximum(alo, blo), np.minimum(ahi, bhi)
+        return alo, ahi   # andnot: bounded by a
+
+
+_register(BoxFilter, ("lo", "hi"))
+_register(BallFilter, ("center", "radius"))
+_register(PolygonFilter, ("vertices", "rest_lo", "rest_hi"))
+jax.tree_util.register_pytree_node(
+    ComposeFilter,
+    lambda f: ((f.a, f.b), f.op),
+    lambda op, ch: ComposeFilter(ch[0], ch[1], op),
+)

@@ -1,0 +1,230 @@
+"""Batched stitched-graph beam search (paper §4.3, Alg. 3 + Alg. 4).
+
+TPU-native execution model (DESIGN.md §2): a `lax.while_loop` over fixed-shape
+state, expanding the best ``W`` unexpanded beam nodes *per query batch* each
+iteration.  Neighbor gathers, distance evaluation (one einsum on the MXU),
+predicate evaluation (VPU), and the beam/result merges (masked top-k) are all
+batched over queries.
+
+Routing modes unify the paper's method and its baselines:
+
+* ``route_mode='cube'``   — CubeGraph: follow an edge iff the target's cube is
+  in the active-cube set **or** the target satisfies φ (the latter only
+  matters with ``dynamic_cubes=True``, Alg. 4's discovery rule).  NB: Alg. 4's
+  pseudocode checks ``B[n.cube]=0 → skip`` *before* the φ test that would set
+  the bit, which would make discovery unreachable; per the prose ("the search
+  naturally expands into relevant cubes as qualifying points are
+  encountered") we route through φ-passing nodes and then activate their
+  cubes.
+* ``route_mode='all'``    — PostFiltering traversal (filter ignored while
+  routing).
+* ``route_mode='filter'`` — PreFiltering / ACORN-style predicate-gated
+  traversal.
+
+``collect_all=True`` makes the result set ignore φ (true post-hoc
+PostFiltering; the caller applies φ afterwards).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .filters import Filter
+
+__all__ = ["beam_search", "SearchParams"]
+
+INF = jnp.float32(np.inf)
+
+
+def _unique_mask(ids: jnp.ndarray) -> jnp.ndarray:
+    """Boolean mask keeping the first occurrence of each id per row. [b, k]"""
+    order = jnp.argsort(ids, axis=1)
+    sorted_ids = jnp.take_along_axis(ids, order, axis=1)
+    first = jnp.concatenate(
+        [jnp.ones_like(sorted_ids[:, :1], bool),
+         sorted_ids[:, 1:] != sorted_ids[:, :-1]], axis=1)
+    out = jnp.zeros_like(first)
+    b = ids.shape[0]
+    return out.at[jnp.arange(b)[:, None], order].set(first)
+
+
+def _merge_topk(ids_a, d_a, ids_b, d_b, k):
+    ids = jnp.concatenate([ids_a, ids_b], axis=1)
+    d = jnp.concatenate([d_a, d_b], axis=1)
+    nd, sel = jax.lax.top_k(-d, k)
+    return jnp.take_along_axis(ids, sel, axis=1), -nd
+
+
+class SearchParams:
+    """Static search configuration (hashable; part of the jit cache key)."""
+
+    def __init__(self, k: int = 10, ef: int = 64, width: int = 4,
+                 max_iters: int = 512, metric: str = "l2",
+                 route_mode: str = "cube", dynamic_cubes: bool = False,
+                 collect_all: bool = False):
+        self.k = int(k)
+        self.ef = int(max(ef, k))
+        self.width = int(width)
+        self.max_iters = int(max_iters)
+        self.metric = metric
+        self.route_mode = route_mode
+        self.dynamic_cubes = bool(dynamic_cubes)
+        self.collect_all = bool(collect_all)
+
+    def _key(self):
+        return (self.k, self.ef, self.width, self.max_iters, self.metric,
+                self.route_mode, self.dynamic_cubes, self.collect_all)
+
+    def __hash__(self):
+        return hash(self._key())
+
+    def __eq__(self, other):
+        return isinstance(other, SearchParams) and self._key() == other._key()
+
+
+@partial(jax.jit, static_argnames=("p",))
+def _beam_search(x, s, norms, valid, cube_of, all_nbrs,
+                 q, filt: Filter, active_cubes, seeds, p: SearchParams):
+    """Core loop.  Shapes:
+    x [n,d], s [n,m], norms [n], valid bool[n], cube_of int32[n],
+    all_nbrs int32[n, deg], q [b,d], active_cubes int32[cmax] (-1 pad,
+    shared across the batch — one filter per call), seeds int32[e].
+    Returns (ids [b,k], dists [b,k]) sorted ascending; -1/inf padded.
+    """
+    n, d = x.shape
+    b = q.shape[0]
+    k, ef, w = p.k, p.ef, p.width
+    q = jnp.asarray(q, jnp.float32)
+    qn = jnp.sum(q * q, axis=-1)
+
+    def distances(cand):                               # [b, kc] ids -> dists
+        safe = jnp.maximum(cand, 0)
+        xv = x[safe]
+        if p.metric == "l2":
+            return norms[safe] - 2.0 * jnp.einsum("bcd,bd->bc", xv, q) + qn[:, None]
+        return -jnp.einsum("bcd,bd->bc", xv, q)
+
+    def phi(cand):                                     # [b, kc] ids -> bool
+        meta = s[jnp.maximum(cand, 0)]
+        return filt.contains(meta)
+
+    # ---- init from seed entry points (shared across batch) ----------------
+    seed_b = jnp.broadcast_to(seeds[None, :], (b, seeds.shape[0]))
+    seed_ok = (seed_b >= 0) & valid[jnp.maximum(seed_b, 0)]
+    sd = jnp.where(seed_ok, distances(seed_b), INF)
+    sphi = phi(seed_b) & seed_ok
+
+    visited = jnp.zeros((b, n), bool)
+    visited = visited.at[:, jnp.maximum(seeds, 0)].max(
+        jnp.broadcast_to(seeds >= 0, (b, seeds.shape[0])))
+
+    pad_i = jnp.full((b, ef), -1, jnp.int32)
+    pad_d = jnp.full((b, ef), INF)
+    beam_ids, beam_d = _merge_topk(pad_i, pad_d, jnp.where(seed_ok, seed_b, -1), sd, ef)
+    beam_exp = jnp.zeros((b, ef), bool)
+
+    res_keep = sphi | (jnp.bool_(p.collect_all) & seed_ok)
+    res_ids, res_d = _merge_topk(
+        jnp.full((b, k), -1, jnp.int32), jnp.full((b, k), INF),
+        jnp.where(res_keep, seed_b, -1), jnp.where(res_keep, sd, INF), k)
+
+    state = (beam_ids, beam_d, beam_exp, res_ids, res_d, visited,
+             active_cubes, jnp.int32(0))
+
+    def cond(st):
+        beam_ids, beam_d, beam_exp, res_ids, res_d, *_, it = st
+        frontier = jnp.where(beam_exp | (beam_ids < 0), INF, beam_d)
+        best = jnp.min(frontier, axis=1)
+        kth = res_d[:, k - 1]
+        return (it < p.max_iters) & jnp.any(best < kth)
+
+    def body(st):
+        beam_ids, beam_d, beam_exp, res_ids, res_d, visited, cubes, it = st
+
+        # -- pick top-W unexpanded beam entries (Alg. 3/4 line 6) ----------
+        frontier = jnp.where(beam_exp | (beam_ids < 0), INF, beam_d)
+        kth = res_d[:, k - 1]
+        negd, sel = jax.lax.top_k(-frontier, w)
+        exp_ok = (-negd) < kth[:, None]                 # only expand improving
+        exp_ids = jnp.take_along_axis(beam_ids, sel, axis=1)
+        exp_ids = jnp.where(exp_ok, exp_ids, -1)
+        beam_exp = beam_exp.at[jnp.arange(b)[:, None], sel].set(True)
+
+        # -- gather intra + cross neighbors (Fig. 3 node block) ------------
+        nb = all_nbrs[jnp.maximum(exp_ids, 0)]          # [b, w, deg]
+        nb = jnp.where(exp_ids[:, :, None] >= 0, nb, -1)
+        cand = nb.reshape(b, -1)                        # [b, kc]
+
+        fresh = (cand >= 0) & valid[jnp.maximum(cand, 0)]
+        fresh &= ~jnp.take_along_axis(visited, jnp.maximum(cand, 0), axis=1)
+        fresh &= _unique_mask(cand)
+
+        # -- predicate + cube gating (Alg. 3 l.8-11 / Alg. 4 l.7-11) --------
+        phi_pass = phi(cand) & fresh
+        ccube = cube_of[jnp.maximum(cand, 0)]
+        in_active = jnp.any(ccube[:, :, None] == cubes[None, None, :], axis=-1)
+        if p.route_mode == "cube":
+            route = fresh & (in_active | phi_pass)
+        elif p.route_mode == "all":
+            route = fresh
+        else:                                           # 'filter'
+            route = fresh & phi_pass
+
+        dval = distances(cand)
+        droute = jnp.where(route, dval, INF)
+
+        visited = visited.at[jnp.arange(b)[:, None], jnp.maximum(cand, 0)].max(route)
+
+        if p.dynamic_cubes:
+            # Alg. 4 line 10: activate cubes of φ-passing points (set-insert
+            # with dedupe; cube set is shared across the batch — one filter).
+            disc = jnp.where(phi_pass, ccube, -1).reshape(-1)
+            comb = jnp.concatenate([cubes, disc.astype(jnp.int32)])
+            comb = -jnp.sort(-comb)                     # descending
+            dup = jnp.concatenate([jnp.zeros((1,), bool), comb[1:] == comb[:-1]])
+            comb = jnp.where(dup, -1, comb)
+            cubes = -jnp.sort(-comb)[: cubes.shape[0]]
+
+        # -- beam + result merges (keep top ef / top k) ---------------------
+        beam_ids, beam_d, beam_exp = _merge_beam(
+            beam_ids, beam_d, beam_exp, cand, droute, ef)
+        res_keep = phi_pass | (jnp.bool_(p.collect_all) & route)
+        res_ids, res_d = _merge_topk(
+            res_ids, res_d, jnp.where(res_keep, cand, -1),
+            jnp.where(res_keep, dval, INF), k)
+
+        return (beam_ids, beam_d, beam_exp, res_ids, res_d, visited,
+                cubes, it + 1)
+
+    def _merge_beam(bi, bd, be, ci, cd, ef):
+        ids = jnp.concatenate([bi, ci], axis=1)
+        dd = jnp.concatenate([bd, cd], axis=1)
+        ee = jnp.concatenate([be, jnp.zeros_like(ci, bool)], axis=1)
+        nd, sel = jax.lax.top_k(-dd, ef)
+        take = lambda a: jnp.take_along_axis(a, sel, axis=1)
+        return take(ids), -nd, take(ee)
+
+    final = jax.lax.while_loop(cond, body, state)
+    res_ids, res_d = final[3], final[4]
+    return jnp.where(jnp.isfinite(res_d), res_ids, -1), res_d
+
+
+def beam_search(
+    x: jnp.ndarray, s: jnp.ndarray, norms: jnp.ndarray, valid: jnp.ndarray,
+    cube_of: jnp.ndarray, all_nbrs: jnp.ndarray,
+    queries: jnp.ndarray, filt: Filter,
+    active_cubes: jnp.ndarray, seeds: jnp.ndarray,
+    params: SearchParams,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Public entry point; see `_beam_search` for shapes."""
+    return _beam_search(
+        jnp.asarray(x, jnp.float32), jnp.asarray(s, jnp.float32),
+        jnp.asarray(norms, jnp.float32), jnp.asarray(valid, bool),
+        jnp.asarray(cube_of, jnp.int32), jnp.asarray(all_nbrs, jnp.int32),
+        jnp.asarray(queries, jnp.float32), filt,
+        jnp.asarray(active_cubes, jnp.int32), jnp.asarray(seeds, jnp.int32),
+        params)

@@ -1,0 +1,76 @@
+"""Sharding-constraint hints usable from model code without threading a mesh
+through every call.
+
+The launcher (dryrun/train/serve) registers the active mesh via
+``use_mesh_hints(mesh)``; model code calls ``constrain(x, *spec)`` which
+applies ``with_sharding_constraint`` only for axes that exist in the
+registered mesh *and* divide the corresponding dimension — otherwise that
+dimension is left unconstrained.  With no registered mesh (unit tests,
+single-device smoke) it is a no-op.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+_CURRENT: Optional[Mesh] = None
+
+
+@contextlib.contextmanager
+def use_mesh_hints(mesh: Mesh):
+    global _CURRENT
+    prev = _CURRENT
+    _CURRENT = mesh
+    try:
+        with mesh:
+            yield
+    finally:
+        _CURRENT = prev
+
+
+def mesh_axis_size(axis) -> int:
+    if _CURRENT is None:
+        return 1
+    if isinstance(axis, tuple):
+        out = 1
+        for a in axis:
+            out *= _CURRENT.shape.get(a, 1)
+        return out
+    return _CURRENT.shape.get(axis, 1)
+
+
+def has_axis(axis) -> bool:
+    if _CURRENT is None:
+        return False
+    names = set(_CURRENT.axis_names)
+    if isinstance(axis, tuple):
+        return all(a in names for a in axis)
+    return axis in names
+
+
+def constrain(x: jax.Array, *spec):
+    """Best-effort with_sharding_constraint; silently drops invalid axes."""
+    if _CURRENT is None:
+        return x
+    clean = []
+    for dim, s in zip(x.shape, spec):
+        if s is None or not has_axis(s):
+            clean.append(None)
+        elif dim % mesh_axis_size(s) == 0 and dim >= mesh_axis_size(s):
+            clean.append(s)
+        else:
+            clean.append(None)
+    # pad remaining dims
+    clean += [None] * (x.ndim - len(clean))
+    if all(c is None for c in clean):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*clean))
+
+
+def dp_axes():
+    if _CURRENT is None:
+        return None
+    return ("pod", "data") if "pod" in _CURRENT.axis_names else "data"

@@ -1,0 +1,112 @@
+"""Roofline accounting from compiled artifacts.
+
+XLA's ``cost_analysis`` counts while-loop (scan) bodies ONCE, so naive
+FLOP/byte readings under-count by ~n_layers (verified empirically in this
+container).  We therefore derive per-layer costs with the **depth-delta
+method**: compile the same full-width config at depth u and u+1; the
+difference is exactly one layer-unit's cost, so
+
+    total(d) = base + d * delta,   base = cost(u) - u * delta.
+
+Collective bytes are not in ``cost_analysis`` at all: ``collective_bytes``
+parses the HLO text and sums operand sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute (per shard), with the same
+depth-delta correction applied by the caller.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'f32[128,256]' -> bytes; tuples handled by caller via findall."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum *output* operand bytes per collective kind over the whole module.
+
+    Each HLO line looks like:
+      %x = f32[a,b] all-reduce(f32[a,b] %y), replica_groups=...
+    We count the result shape (left of '='), which for all-gather reflects
+    the gathered size and for reduce-scatter the scattered size — a
+    reasonable single-number proxy for link traffic per participating shard.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    # strict: "<var> = <shape> <collective-op>(" — the opcode must be the
+    # instruction itself (fusions merely *consuming* a collective operand
+    # must not match).
+    pat = re.compile(
+        r"%?[\w.\-]+\s*=\s*"
+        r"((?:\([^)]*\))|(?:\w+\[[\d,]*\](?:\{[^}]*\})?))\s+"
+        r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+        r"collective-permute)(?:-start)?\(")
+    for line in hlo_text.splitlines():
+        m = pat.match(line.strip())
+        if not m:
+            continue
+        out[m.group(2)] += _shape_bytes(m.group(1))
+        out["count"] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def flops_and_bytes(cost: dict) -> Dict[str, float]:
+    """Extract per-device flops / bytes from compiled.cost_analysis()."""
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+    }
+
+
+def depth_delta(cost_u, cost_u1, coll_u, coll_u1, u: int, full_depth: int
+                ) -> Dict[str, float]:
+    """Linear extrapolation: total(full) = base + full_depth * delta."""
+    out = {}
+    for key in ("flops", "bytes"):
+        delta = cost_u1[key] - cost_u[key]
+        base = cost_u[key] - u * delta
+        out[key] = base + full_depth * delta
+        out[key + "_per_layer"] = delta
+    dcol = coll_u1["total"] - coll_u["total"]
+    bcol = coll_u["total"] - u * dcol
+    out["collective_bytes"] = bcol + full_depth * dcol
+    out["collective_bytes_per_layer"] = dcol
+    return out
+
+
+def roofline_terms(flops: float, bytes_: float, coll_bytes: float,
+                   chips: int, peak_flops: float, hbm_bw: float,
+                   ici_bw: float, per_device: bool = True) -> Dict[str, float]:
+    """The three §Roofline terms in seconds.  cost_analysis numbers on the
+    host backend are per-shard (= per device), so divide only when asked."""
+    div = 1 if per_device else chips
+    t_compute = flops / div / peak_flops
+    t_memory = bytes_ / div / hbm_bw
+    t_coll = coll_bytes / div / ici_bw
+    dom = max(("compute", t_compute), ("memory", t_memory),
+              ("collective", t_coll), key=lambda kv: kv[1])
+    return {"compute_s": t_compute, "memory_s": t_memory,
+            "collective_s": t_coll, "bottleneck": dom[0]}

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for CubeGraph's compute hot-spots (validated in
+interpret mode on CPU; see DESIGN.md §2.2).
+
+- ``distance``      tiled pairwise distance matrix (MXU contraction)
+- ``filtered_topk`` fused distance + spatio-temporal predicate + streaming
+                    top-k (the paper's Fig. 3 aligned-traversal loop)
+- ``ref``           pure-jnp oracles
+- ``ops``           jit'd wrappers with padding + filter encoding
+"""
+from .ops import exact_filtered_search, filtered_topk, pairwise_dist
+
+__all__ = ["exact_filtered_search", "filtered_topk", "pairwise_dist"]

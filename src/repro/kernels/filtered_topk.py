@@ -1,0 +1,167 @@
+"""Pallas TPU kernel: fused distance + spatio-temporal filter + streaming
+top-k — the paper's hot loop (Fig. 3: metadata aligned with the node block so
+the predicate is evaluated during traversal, not post-hoc).
+
+Per grid step, a ``[tn, d]`` candidate-vector tile and its ``[tn, mpad]``
+metadata tile are resident in VMEM; the kernel
+
+  1. computes the query-block distances on the MXU,
+  2. evaluates the packed filter predicate on the VPU and masks failures to
+     +inf,
+  3. folds the tile into a running top-k kept in VMEM scratch via a
+     K-step argmin extraction (one-hot masking, no scatter) followed by a
+     bitonic merge of two sorted-K lists — all static-shape compare/exchange
+     networks, i.e. Mosaic-friendly (no data-dependent control flow).
+
+Grid order is (query tile, candidate tile) with the candidate axis innermost:
+scratch initializes at j == 0 and the result is emitted at the last j
+(flash-attention-style streaming reduction).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["filtered_topk_kernel_call", "FILTER_KINDS"]
+
+FILTER_KINDS = ("none", "box", "ball", "box_not_ball")
+_NEG = -1e30
+_POS = 1e30
+
+
+def _filter_mask(meta, params, kind):
+    """meta [tn, mpad], params [4, mpad] -> bool [tn]."""
+    mpad = meta.shape[-1]
+    in_box = jnp.all((meta >= params[0]) & (meta <= params[1]), axis=-1)
+    mc = params[3, 1].astype(jnp.int32)
+    dim_mask = jax.lax.broadcasted_iota(jnp.int32, (mpad,), 0) < mc
+    diff = meta - params[2]
+    d2 = jnp.sum(jnp.where(dim_mask, diff * diff, 0.0), axis=-1)
+    in_ball = d2 <= params[3, 0]
+    if kind == "none":
+        # padding rows carry meta = +2e30 and must still fail:
+        return meta[:, 0] < _POS
+    if kind == "box":
+        return in_box
+    if kind == "ball":
+        return in_ball
+    return in_box & ~in_ball                       # box_not_ball
+
+
+def _merge_sorted(run_d, run_i, tile_d, tile_i):
+    """Bitonic merge of two ascending [tq, kpad] lists -> ascending top-kpad."""
+    kpad = run_d.shape[1]
+    comb_d = jnp.concatenate([run_d, jnp.flip(tile_d, axis=1)], axis=1)
+    comb_i = jnp.concatenate([run_i, jnp.flip(tile_i, axis=1)], axis=1)
+    stride = kpad
+    while stride >= 1:
+        tq = comb_d.shape[0]
+        nb = comb_d.shape[1] // (2 * stride)
+        d4 = comb_d.reshape(tq, nb, 2, stride)
+        i4 = comb_i.reshape(tq, nb, 2, stride)
+        a_d, b_d = d4[:, :, 0, :], d4[:, :, 1, :]
+        a_i, b_i = i4[:, :, 0, :], i4[:, :, 1, :]
+        swap = a_d > b_d
+        lo_d = jnp.where(swap, b_d, a_d)
+        hi_d = jnp.where(swap, a_d, b_d)
+        lo_i = jnp.where(swap, b_i, a_i)
+        hi_i = jnp.where(swap, a_i, b_i)
+        comb_d = jnp.stack([lo_d, hi_d], axis=2).reshape(tq, -1)
+        comb_i = jnp.stack([lo_i, hi_i], axis=2).reshape(tq, -1)
+        stride //= 2
+    return comb_d[:, :kpad], comb_i[:, :kpad]
+
+
+def _fused_kernel(q_ref, x_ref, s_ref, p_ref, od_ref, oi_ref,
+                  run_d, run_i, *, metric, kind, kpad, tn, n_ctiles):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        run_d[...] = jnp.full(run_d.shape, jnp.inf, jnp.float32)
+        run_i[...] = jnp.full(run_i.shape, -1, jnp.int32)
+
+    q = q_ref[...]
+    x = x_ref[...]
+    ip = jax.lax.dot_general(q, x, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    if metric == "l2":
+        qf = q.astype(jnp.float32)
+        xf = x.astype(jnp.float32)
+        d = (jnp.sum(qf * qf, axis=1)[:, None] - 2.0 * ip
+             + jnp.sum(xf * xf, axis=1)[None, :])
+    else:
+        d = -ip
+
+    ok = _filter_mask(s_ref[...], p_ref[...], kind)
+    d = jnp.where(ok[None, :], d, jnp.inf)
+
+    # --- tile top-k: kpad rounds of argmin + one-hot mask (no scatter) -----
+    tq = d.shape[0]
+    col = jax.lax.broadcasted_iota(jnp.int32, (tq, tn), 1)
+    base = j * tn
+    tds, tis = [], []
+    for _ in range(kpad):
+        mn = jnp.min(d, axis=1)
+        am = jnp.argmin(d, axis=1).astype(jnp.int32)
+        tds.append(mn)
+        tis.append(jnp.where(jnp.isfinite(mn), base + am, -1))
+        d = jnp.where(col == am[:, None], jnp.inf, d)
+    tile_d = jnp.stack(tds, axis=1)                       # ascending
+    tile_i = jnp.stack(tis, axis=1)
+
+    nd, ni = _merge_sorted(run_d[...], run_i[...], tile_d, tile_i)
+    run_d[...] = nd
+    run_i[...] = ni
+
+    @pl.when(j == n_ctiles - 1)
+    def _emit():
+        od_ref[...] = run_d[...]
+        oi_ref[...] = run_i[...]
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "kind", "kpad", "tq",
+                                             "tn", "interpret"))
+def filtered_topk_kernel_call(q, x, s_pad, params, *, kind: str, kpad: int,
+                              metric: str = "l2", tq: int = 64, tn: int = 256,
+                              interpret: bool = True):
+    """Fused filtered top-k.  Pre-padded inputs:
+    q [bq, d] (bq % tq == 0, d % 128 == 0), x [n, d] (n % tn == 0),
+    s_pad [n, mpad] metadata padded to 128 lanes (+2e30 in padding rows so
+    they fail every predicate), params [4, mpad] packed filter
+    (box lo/hi, ball center, [r^2, ball_ndim]).  kpad power of two <= tn.
+    Returns (dists [bq, kpad] ascending, ids [bq, kpad], -1 for misses).
+    """
+    assert kpad & (kpad - 1) == 0 and kpad <= tn
+    bq, d = q.shape
+    n, mpad = s_pad.shape
+    grid = (bq // tq, n // tn)
+    kern = functools.partial(_fused_kernel, metric=metric, kind=kind,
+                             kpad=kpad, tn=tn, n_ctiles=grid[1])
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tn, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((tn, mpad), lambda i, j: (j, 0)),
+            pl.BlockSpec((4, mpad), lambda i, j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tq, kpad), lambda i, j: (i, 0)),
+            pl.BlockSpec((tq, kpad), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bq, kpad), jnp.float32),
+            jax.ShapeDtypeStruct((bq, kpad), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((tq, kpad), jnp.float32),
+            pltpu.VMEM((tq, kpad), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q, x, s_pad, params)

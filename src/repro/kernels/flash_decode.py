@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: fused single-token decode attention ("flash-decode").
+
+Hillclimb iteration L8 (EXPERIMENTS.md §Perf) showed decode_32k cells are
+bound by KV-cache streaming; the unfused XLA path makes three HBM passes over
+the cache slice (scores, softmax, weighted sum) plus fp32 score
+materialization.  This kernel makes ONE pass: per grid step a ``[tS, hd]``
+K/V tile is resident in VMEM and the running (max, sum-exp, weighted-V)
+triple is updated online (streaming softmax), so the cache is read exactly
+once at bf16 width.
+
+Layout: one query vector per (batch, kv-head) pair against its cache rows —
+GQA handled by evaluating the ``g`` query heads of a kv-head together
+(``q [g, hd]`` block, MXU-friendly ``g x tS`` score tile).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_decode_kernel_call"]
+
+
+def _kernel(q_ref, k_ref, v_ref, len_ref, o_ref,
+            m_scr, s_scr, acc, *, ts, n_tiles, scale):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full(m_scr.shape, -1e30, jnp.float32)
+        s_scr[...] = jnp.zeros(s_scr.shape, jnp.float32)
+        acc[...] = jnp.zeros(acc.shape, jnp.float32)
+
+    q = q_ref[0]                                     # [g, hd]
+    k = k_ref[0]                                     # [ts, hd]
+    v = v_ref[0]
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale  # [g, ts]
+    # mask positions beyond the filled prefix
+    limit = len_ref[0, 0, 0]
+    col = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1) + j * ts
+    scores = jnp.where(col <= limit, scores, -1e30)
+
+    m_prev = m_scr[...]                              # [g, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)                  # [g, 1]
+    p = jnp.exp(scores - m_new)                      # [g, ts]
+    s_scr[...] = s_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc[...] = acc[...] * alpha + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(j == n_tiles - 1)
+    def _emit():
+        o_ref[0] = (acc[...] / s_scr[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("ts", "interpret"))
+def flash_decode_kernel_call(q, k, v, lengths, *, ts: int = 512,
+                             interpret: bool = True):
+    """q [bkv, g, hd] (one row per (batch, kv-head); g = GQA group),
+    k/v [bkv, smax, hd] cache slices, lengths [bkv] filled prefix (inclusive).
+    smax % ts == 0, hd % 128 == 0, g a multiple of 8 (pad in the wrapper).
+    Returns o [bkv, g, hd]."""
+    bkv, g, hd = q.shape
+    smax = k.shape[1]
+    n_tiles = smax // ts
+    scale = 1.0 / (hd ** 0.5)
+    lens = lengths.reshape(bkv, 1, 1).astype(jnp.int32)
+    kern = functools.partial(_kernel, ts=ts, n_tiles=n_tiles, scale=scale)
+    return pl.pallas_call(
+        kern,
+        grid=(bkv, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, g, hd), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, ts, hd), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, ts, hd), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1, 1), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, hd), lambda i, j: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bkv, g, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q.reshape(bkv, g, hd), k, v, lens)

@@ -1,0 +1,137 @@
+"""Jit'd public wrappers around the Pallas kernels (padding, filter encoding,
+kernel/reference dispatch).
+
+On this CPU container the kernels execute with ``interpret=True``; on a real
+TPU set ``interpret=False`` (the kernels are written with static-shape
+compare/exchange networks and 128-aligned tiles so they lower via Mosaic).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.filters import BallFilter, BoxFilter, ComposeFilter, Filter
+from . import ref
+from .distance import pairwise_dist_kernel_call
+from .filtered_topk import filtered_topk_kernel_call
+
+__all__ = ["pairwise_dist", "filtered_topk", "encode_filter",
+           "exact_filtered_search"]
+
+_POS = 1e30
+_PAD_META = 2e30
+
+
+def _pad_to(a, axis, mult, value):
+    pad = (-a.shape[axis]) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths, constant_values=value)
+
+
+def _next_pow2(v: int) -> int:
+    p = 1
+    while p < v:
+        p *= 2
+    return p
+
+
+def pairwise_dist(q, x, metric: str = "l2", use_kernel: bool = True,
+                  tq: int = 128, tn: int = 512, interpret: bool = True):
+    """[bq, d] x [n, d] -> [bq, n] distance matrix."""
+    if not use_kernel:
+        return (ref.pairwise_sq_l2(q, x) if metric == "l2"
+                else ref.pairwise_neg_ip(q, x))
+    bq, n = q.shape[0], x.shape[0]
+    q = _pad_to(_pad_to(jnp.asarray(q), 1, 128, 0.0), 0, tq, 0.0)
+    x = _pad_to(_pad_to(jnp.asarray(x), 1, 128, 0.0), 0, tn, 0.0)
+    out = pairwise_dist_kernel_call(q, x, metric=metric, tq=tq, tn=tn,
+                                    interpret=interpret)
+    return out[:bq, :n]
+
+
+def encode_filter(filt: Optional[Filter], m: int,
+                  mpad: int = 128) -> Optional[Tuple[str, np.ndarray]]:
+    """Filter object -> (kind, packed [4, mpad] params) or None if the filter
+    has no kernel encoding (the caller falls back to the jnp path)."""
+    params = np.zeros((4, mpad), np.float32)
+    params[0, :] = -_POS
+    params[1, :] = _POS
+    params[3, 0] = _POS          # ball r^2 (pass-all by default)
+    params[3, 1] = 0             # ball ndim
+
+    def put_box(lo, hi):
+        params[0, :m] = np.maximum(params[0, :m], np.asarray(lo, np.float32))
+        params[1, :m] = np.minimum(params[1, :m], np.asarray(hi, np.float32))
+
+    if filt is None:
+        return "none", params
+    if isinstance(filt, BoxFilter):
+        put_box(filt.lo, filt.hi)
+        return "box", params
+    if isinstance(filt, BallFilter):
+        c = np.asarray(filt.center, np.float32)
+        params[2, : len(c)] = c
+        params[3, 0] = float(np.asarray(filt.radius)) ** 2
+        params[3, 1] = len(c)
+        return "ball", params
+    if isinstance(filt, ComposeFilter):
+        a, b, op = filt.a, filt.b, filt.op
+        if (op == "andnot" and isinstance(a, BoxFilter)
+                and isinstance(b, BallFilter)):
+            put_box(a.lo, a.hi)
+            c = np.asarray(b.center, np.float32)
+            params[2, : len(c)] = c
+            params[3, 0] = float(np.asarray(b.radius)) ** 2
+            params[3, 1] = len(c)
+            return "box_not_ball", params
+        if op == "and" and isinstance(a, BallFilter) and isinstance(b, BoxFilter):
+            # ball ∧ box: box goes to rows 0/1, ball to rows 2/3 with kind
+            # needing both => encode as box_not_ball with inverted ball? No —
+            # use a dedicated 'ball' + box composite: box rows apply in every
+            # kind except 'none'/'ball'; keep jnp fallback for this one.
+            return None
+    return None
+
+
+def filtered_topk(q, x, s, filt: Optional[Filter], k: int,
+                  metric: str = "l2", use_kernel: bool = True,
+                  tq: int = 64, tn: int = 256, interpret: bool = True):
+    """Fused brute-force filtered top-k (exact): returns (ids [bq, k] int32
+    with -1 misses, dists [bq, k] ascending)."""
+    q = jnp.asarray(q, jnp.float32)
+    x = jnp.asarray(x, jnp.float32)
+    s = jnp.asarray(s, jnp.float32)
+    bq, n = q.shape[0], x.shape[0]
+    enc = encode_filter(filt, s.shape[1]) if use_kernel else None
+    if enc is None:
+        # jnp fallback (arbitrary Filter objects, incl. polygons)
+        d = (ref.pairwise_sq_l2(q, x) if metric == "l2"
+             else ref.pairwise_neg_ip(q, x))
+        if filt is not None:
+            ok = filt.contains(s)
+            d = jnp.where(ok[None, :], d, jnp.inf)
+        neg, ids = jax.lax.top_k(-d, k)
+        dd = -neg
+        return jnp.where(jnp.isfinite(dd), ids, -1), dd
+    kind, params = enc
+    kpad = _next_pow2(max(k, 8))
+    tn = max(tn, kpad)
+    qp = _pad_to(_pad_to(q, 1, 128, 0.0), 0, tq, 0.0)
+    xp = _pad_to(_pad_to(x, 1, 128, 0.0), 0, tn, 0.0)
+    sp = _pad_to(_pad_to(s, 1, 128, 0.0), 0, tn, _PAD_META)
+    dd, ids = filtered_topk_kernel_call(
+        qp, xp, sp, jnp.asarray(params), kind=kind, kpad=kpad, metric=metric,
+        tq=tq, tn=tn, interpret=interpret)
+    return ids[:bq, :k], dd[:bq, :k]
+
+
+def exact_filtered_search(q, x, s, filt: Optional[Filter], k: int,
+                          metric: str = "l2", **kw):
+    """Ground-truth generator: exact filtered top-k at kernel speed."""
+    return filtered_topk(q, x, s, filt, k, metric=metric, **kw)

@@ -1,0 +1,6 @@
+"""Model zoo: config-driven LM backbones for the assigned architectures."""
+from .api import build_model
+from .common import ArchConfig, Spec, abstract_params, init_params
+
+__all__ = ["build_model", "ArchConfig", "Spec", "abstract_params",
+           "init_params"]

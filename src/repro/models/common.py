@@ -1,0 +1,142 @@
+"""Architecture config + spec-driven parameter utilities.
+
+Parameters are plain nested dicts of jnp arrays ("pytree params", no flax).
+Every module defines its parameters once as *specs* (shape + init scale);
+``init_params`` materializes them with jax.random, ``abstract_params`` turns
+them into ShapeDtypeStructs for the multi-pod dry-run (no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    """One config covers every assigned family (unused fields ignored)."""
+
+    name: str
+    family: str                     # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = True
+
+    # -- attention pattern ------------------------------------------------
+    sliding_window: Optional[int] = None    # local window size (tokens)
+    global_every: Optional[int] = None      # gemma3: 1 global per N layers
+    mlp_gated: bool = True                  # SwiGLU (True) vs GELU 2-matrix
+
+    # -- MoE ---------------------------------------------------------------
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    d_expert: int = 0                       # per-expert ffn width
+    capacity_factor: float = 1.25
+
+    # -- SSM ---------------------------------------------------------------
+    ssm_type: Optional[str] = None          # mamba1 | mamba2
+    d_state: int = 16
+    expand: int = 2
+    conv_kernel: int = 4
+    ssm_head_dim: int = 64                  # mamba2 head dim
+    dt_rank: Optional[int] = None
+
+    # -- hybrid (zamba2): one *shared* attention block every k ssm layers --
+    attn_every: int = 0
+
+    # -- encoder-decoder (whisper) -----------------------------------------
+    n_enc_layers: int = 0
+    n_frames: int = 1500                    # stub conv-frontend output length
+
+    # -- VLM stub frontend ---------------------------------------------------
+    n_patches: int = 0
+
+    # -- compute -----------------------------------------------------------
+    dtype: str = "bfloat16"
+    remat: bool = True
+    unroll: bool = False            # unroll layer scans (roofline accounting)
+    ssm_chunk: int = 0              # 0 = default chunk; -1 = single chunk
+    attn_q_chunk: int = 1024        # query-block size for chunked attention
+    seq_parallel: bool = False      # shard residual stream seq over 'model'
+    moe_local_dispatch: bool = False  # per-dp-block dispatch sort (EP a2a)
+    remat_policy: str = "full"      # full | dots | none
+    decode_shard: str = "auto"      # auto | seq | heads (KV cache layout)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.n_heads
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def compute_dtype(self):
+        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+    def n_params(self) -> int:
+        """Analytic parameter count (for MODEL_FLOPS = 6·N·D)."""
+        from .api import build_model
+        specs = build_model(self).param_specs()
+        return sum(int(math.prod(s.shape)) for s in jax.tree.leaves(specs))
+
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: routed top-k + shared only)."""
+        total = self.n_params()
+        if self.family != "moe":
+            return total
+        per_expert = 3 * self.d_model * self.d_expert
+        inactive = (self.n_experts - self.top_k) * per_expert * self.n_layers
+        return total - inactive
+
+
+# ---------------------------------------------------------------------------
+# Spec-driven params
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    shape: Tuple[int, ...]
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"            # normal | zeros | ones | small
+    scale: float = 1.0
+
+
+def abstract_params(specs: Params) -> Params:
+    return jax.tree.map(
+        lambda sp: jax.ShapeDtypeStruct(sp.shape, sp.dtype), specs,
+        is_leaf=lambda v: isinstance(v, Spec))
+
+
+def init_params(specs: Params, key: jax.Array) -> Params:
+    leaves, treedef = jax.tree.flatten(
+        specs, is_leaf=lambda v: isinstance(v, Spec))
+    keys = jax.random.split(key, len(leaves))
+
+    def mk(sp: Spec, k):
+        if sp.init == "zeros":
+            return jnp.zeros(sp.shape, sp.dtype)
+        if sp.init == "ones":
+            return jnp.ones(sp.shape, sp.dtype)
+        fan_in = sp.shape[-2] if len(sp.shape) >= 2 else sp.shape[-1]
+        std = sp.scale / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(k, sp.shape, jnp.float32) * std).astype(sp.dtype)
+
+    return jax.tree.unflatten(treedef, [mk(sp, k) for sp, k in zip(leaves, keys)])
+
+
+def count_params(specs: Params) -> int:
+    return sum(int(math.prod(sp.shape)) for sp in jax.tree.leaves(
+        specs, is_leaf=lambda v: isinstance(v, Spec)) if isinstance(sp, Spec))

@@ -1,0 +1,193 @@
+"""Encoder-decoder transformer backbone (whisper-medium).
+
+Per assignment spec the conv/audio frontend is a STUB: the model consumes
+precomputed frame embeddings ``[b, n_frames, d_model]`` (``input_specs``
+provides them).  Encoder = bidirectional attention stack; decoder = causal
+self-attention + cross-attention to the encoder output.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import ArchConfig, Params, Spec
+from .layers import (_attend, attention, attention_decode, attention_specs,
+                     embed, embed_specs, mlp, mlp_specs, rms_norm, rope,
+                     unembed)
+from .scan_utils import scan_layers
+
+GLOBAL = jnp.int32(-1)
+
+
+class EncDecLM:
+    def __init__(self, cfg: ArchConfig):
+        assert cfg.n_enc_layers > 0
+        self.cfg = cfg
+
+    def _enc_layer_specs(self) -> Params:
+        cfg = self.cfg
+        dt = cfg.compute_dtype
+        return {"ln1": Spec((cfg.d_model,), dt, init="ones"),
+                "attn": attention_specs(cfg),
+                "ln2": Spec((cfg.d_model,), dt, init="ones"),
+                "mlp": mlp_specs(cfg)}
+
+    def _dec_layer_specs(self) -> Params:
+        cfg = self.cfg
+        dt = cfg.compute_dtype
+        return {"ln1": Spec((cfg.d_model,), dt, init="ones"),
+                "self_attn": attention_specs(cfg),
+                "ln_x": Spec((cfg.d_model,), dt, init="ones"),
+                "cross_attn": attention_specs(cfg),
+                "ln2": Spec((cfg.d_model,), dt, init="ones"),
+                "mlp": mlp_specs(cfg)}
+
+    def param_specs(self) -> Params:
+        cfg = self.cfg
+
+        def stack(n, specs):
+            return jax.tree.map(
+                lambda s: Spec((n,) + s.shape, s.dtype, s.init, s.scale),
+                specs, is_leaf=lambda v: isinstance(v, Spec))
+
+        return {
+            "embed": embed_specs(cfg),
+            "enc_layers": stack(cfg.n_enc_layers, self._enc_layer_specs()),
+            "dec_layers": stack(cfg.n_layers, self._dec_layer_specs()),
+            "enc_norm": Spec((cfg.d_model,), cfg.compute_dtype, init="ones"),
+            "final_norm": Spec((cfg.d_model,), cfg.compute_dtype, init="ones"),
+        }
+
+    # -- encoder ---------------------------------------------------------------
+    def encode(self, params, frames):
+        """frames [b, nf, d] (stub frontend output) -> [b, nf, d]."""
+        cfg = self.cfg
+        positions = jnp.arange(frames.shape[1])[None, :]
+
+        def body(x, p):
+            h = rms_norm(x, p["ln1"], cfg.norm_eps)
+            x = x + attention(h, p["attn"], cfg, positions, GLOBAL,
+                              causal=False)
+            h = rms_norm(x, p["ln2"], cfg.norm_eps)
+            return x + mlp(h, p["mlp"]), None
+
+        f = body
+        if cfg.remat:
+            f = jax.remat(body)
+        x, _ = scan_layers(f, frames.astype(cfg.compute_dtype),
+                           params["enc_layers"], cfg.unroll)
+        return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+    # -- decoder train forward ---------------------------------------------------
+    def _dec_layer(self, x, p, enc_out, positions, enc_positions):
+        cfg = self.cfg
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        x = x + attention(h, p["self_attn"], cfg, positions, GLOBAL,
+                          causal=True)
+        h = rms_norm(x, p["ln_x"], cfg.norm_eps)
+        b, sk = enc_out.shape[:2]
+        hd = cfg.hd
+        k = jnp.einsum("bsd,dq->bsq", enc_out, p["cross_attn"]["wk"]).reshape(
+            b, sk, cfg.n_kv, hd)
+        v = jnp.einsum("bsd,dq->bsq", enc_out, p["cross_attn"]["wv"]).reshape(
+            b, sk, cfg.n_kv, hd)
+        x = x + attention(h, p["cross_attn"], cfg, positions, GLOBAL,
+                          causal=False, kv=(k, v), kv_positions=enc_positions)
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        return x + mlp(h, p["mlp"])
+
+    def logits(self, params, tokens, frames):
+        cfg = self.cfg
+        enc_out = self.encode(params, frames)
+        x = embed(tokens, params["embed"])
+        positions = jnp.arange(tokens.shape[1])[None, :]
+        enc_positions = jnp.arange(enc_out.shape[1])[None, :]
+        body = self._dec_layer
+        if cfg.remat:
+            body = jax.remat(body)
+
+        def scan_fn(x, p):
+            return body(x, p, enc_out, positions, enc_positions), None
+
+        x, _ = scan_layers(scan_fn, x, params["dec_layers"], cfg.unroll)
+        h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return unembed(h, params["embed"]), jnp.float32(0.0)
+
+    def loss(self, params, batch):
+        logits, _ = self.logits(params, batch["tokens"], batch["frames"])
+        labels = batch["labels"]
+        from .losses import cross_entropy
+        return cross_entropy(logits, labels)
+
+    # -- serving ------------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int) -> Params:
+        cfg = self.cfg
+        return {
+            "k": jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv, cfg.hd),
+                           cfg.compute_dtype),
+            "v": jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv, cfg.hd),
+                           cfg.compute_dtype),
+            "xk": jnp.zeros((cfg.n_layers, batch, cfg.n_frames, cfg.n_kv,
+                             cfg.hd), cfg.compute_dtype),
+            "xv": jnp.zeros((cfg.n_layers, batch, cfg.n_frames, cfg.n_kv,
+                             cfg.hd), cfg.compute_dtype),
+        }
+
+    def cache_specs(self, batch: int, max_len: int) -> Params:
+        return jax.eval_shape(lambda: self.init_cache(batch, max_len))
+
+    def prefill(self, params, tokens, cache, frames=None):
+        """Encode frames, fill cross-attention K/V, run decoder prompt."""
+        cfg = self.cfg
+        enc_out = self.encode(params, frames)
+        b, nf = enc_out.shape[:2]
+        hd = cfg.hd
+
+        def cross_kv(p):
+            k = jnp.einsum("bsd,dq->bsq", enc_out, p["cross_attn"]["wk"]
+                           ).reshape(b, nf, cfg.n_kv, hd)
+            v = jnp.einsum("bsd,dq->bsq", enc_out, p["cross_attn"]["wv"]
+                           ).reshape(b, nf, cfg.n_kv, hd)
+            return k, v
+
+        xk, xv = jax.vmap(cross_kv)(params["dec_layers"])
+        logits, _ = self.logits(params, tokens, frames)
+        return logits[:, -1:], {**cache, "xk": xk.astype(cache["xk"].dtype),
+                                "xv": xv.astype(cache["xv"].dtype)}
+
+    def decode_step(self, params, token, cache, pos):
+        cfg = self.cfg
+        x = embed(token, params["embed"])
+        enc_positions = jnp.arange(cfg.n_frames)[None, :]
+
+        def scan_fn(carry, inp):
+            x, k_all, v_all = carry
+            p, xk, xv, i = inp
+            h = rms_norm(x, p["ln1"], cfg.norm_eps)
+            ck = jax.lax.dynamic_index_in_dim(k_all, i, 0, keepdims=False)
+            cv = jax.lax.dynamic_index_in_dim(v_all, i, 0, keepdims=False)
+            o, ck, cv = attention_decode(h, p["self_attn"], cfg, ck, cv, pos,
+                                         GLOBAL)
+            k_all = jax.lax.dynamic_update_index_in_dim(
+                k_all, ck.astype(k_all.dtype), i, 0)
+            v_all = jax.lax.dynamic_update_index_in_dim(
+                v_all, cv.astype(v_all.dtype), i, 0)
+            x = x + o
+            h = rms_norm(x, p["ln_x"], cfg.norm_eps)
+            b = h.shape[0]
+            q = jnp.einsum("bsd,dq->bsq", h, p["cross_attn"]["wq"]).reshape(
+                b, 1, cfg.n_heads, cfg.hd)
+            o = _attend(q, xk, xv, pos[:, None], enc_positions, GLOBAL, False,
+                        p["cross_attn"]["wo"], cfg)
+            x = x + o
+            h = rms_norm(x, p["ln2"], cfg.norm_eps)
+            return (x + mlp(h, p["mlp"]), k_all, v_all), None
+
+        idx = jnp.arange(cfg.n_layers)
+        (x, k, v), _ = scan_layers(
+            scan_fn, (x, cache["k"], cache["v"]),
+            (params["dec_layers"], cache["xk"], cache["xv"], idx), cfg.unroll)
+        h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return unembed(h, params["embed"]), {**cache, "k": k, "v": v}

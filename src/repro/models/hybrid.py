@@ -1,0 +1,155 @@
+"""Zamba2-style hybrid: Mamba-2 backbone + one *shared* attention block
+applied after every ``attn_every`` SSM layers (same weights every time).
+
+54 mamba layers / attn_every=6 => 9 groups; group g = 6 scanned mamba2
+layers followed by the shared (attention + MLP) block.  The shared block's
+KV cache is per-invocation: ``[n_groups, b, smax, n_kv, hd]``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ArchConfig, Params, Spec
+from .layers import (attention, attention_decode, attention_specs, embed,
+                     embed_specs, mlp, mlp_specs, rms_norm, unembed)
+from .scan_utils import scan_layers
+from .ssm import mamba2, mamba2_decode, mamba2_specs
+
+
+class HybridLM:
+    def __init__(self, cfg: ArchConfig):
+        assert cfg.ssm_type == "mamba2" and cfg.attn_every > 0
+        assert cfg.n_layers % cfg.attn_every == 0
+        self.cfg = cfg
+        self.n_groups = cfg.n_layers // cfg.attn_every
+
+    def _ssm_layer_specs(self) -> Params:
+        return {"ln": Spec((self.cfg.d_model,), self.cfg.compute_dtype,
+                           init="ones"),
+                "ssm": mamba2_specs(self.cfg)}
+
+    def param_specs(self) -> Params:
+        cfg = self.cfg
+        # stacked as [n_groups, attn_every, ...] for the nested scan
+        stack = jax.tree.map(
+            lambda s: Spec((self.n_groups, cfg.attn_every) + s.shape,
+                           s.dtype, s.init, s.scale),
+            self._ssm_layer_specs(), is_leaf=lambda v: isinstance(v, Spec))
+        shared = {
+            "ln1": Spec((cfg.d_model,), cfg.compute_dtype, init="ones"),
+            "attn": attention_specs(cfg),
+            "ln2": Spec((cfg.d_model,), cfg.compute_dtype, init="ones"),
+            "mlp": mlp_specs(cfg),
+        }
+        return {"embed": embed_specs(cfg), "ssm_layers": stack,
+                "shared": shared,
+                "final_norm": Spec((cfg.d_model,), cfg.compute_dtype,
+                                   init="ones")}
+
+    # -- forward --------------------------------------------------------------
+    def _shared_block(self, x, p, positions, window):
+        cfg = self.cfg
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        x = x + attention(h, p["attn"], cfg, positions, window, causal=True)
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        return x + mlp(h, p["mlp"])
+
+    def hidden_states(self, params, x):
+        cfg = self.cfg
+        positions = jnp.arange(x.shape[1])[None, :]
+        window = jnp.int32(cfg.sliding_window if cfg.sliding_window else -1)
+
+        chunk = (x.shape[1] if cfg.ssm_chunk == -1
+                 else (cfg.ssm_chunk or 128))
+
+        def ssm_layer(x, p):
+            h = rms_norm(x, p["ln"], cfg.norm_eps)
+            return x + mamba2(h, p["ssm"], cfg, chunk=chunk), None
+
+        def group(x, pg):
+            body = ssm_layer
+            if cfg.remat:
+                body = jax.remat(ssm_layer)
+            x, _ = scan_layers(body, x, pg, cfg.unroll)
+            x = self._shared_block(x, params["shared"], positions, window)
+            return x, None
+
+        x, _ = scan_layers(group, x, params["ssm_layers"], cfg.unroll)
+        return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+    def logits(self, params, tokens, patches=None):
+        x = embed(tokens, params["embed"])
+        return unembed(self.hidden_states(params, x), params["embed"]), \
+            jnp.float32(0.0)
+
+    def loss(self, params, batch):
+        logits, _ = self.logits(params, batch["tokens"])
+        labels = batch["labels"]
+        from .losses import cross_entropy
+        return cross_entropy(logits, labels)
+
+    # -- serving --------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int) -> Params:
+        cfg = self.cfg
+        nh = cfg.d_inner // cfg.ssm_head_dim
+        g = self.n_groups
+        return {
+            "conv": jnp.zeros((g, cfg.attn_every, batch, cfg.conv_kernel - 1,
+                               cfg.d_inner + 2 * cfg.d_state),
+                              cfg.compute_dtype),
+            "ssm": jnp.zeros((g, cfg.attn_every, batch, nh, cfg.ssm_head_dim,
+                              cfg.d_state), jnp.float32),
+            "k": jnp.zeros((g, batch, max_len, cfg.n_kv, cfg.hd),
+                           cfg.compute_dtype),
+            "v": jnp.zeros((g, batch, max_len, cfg.n_kv, cfg.hd),
+                           cfg.compute_dtype),
+        }
+
+    def cache_specs(self, batch: int, max_len: int) -> Params:
+        dummy = jax.eval_shape(lambda: self.init_cache(batch, max_len))
+        return dummy
+
+    def prefill(self, params, tokens, cache, patches=None):
+        logits, _ = self.logits(params, tokens)
+        return logits[:, -1:], cache
+
+    def decode_step(self, params, token, cache, pos):
+        cfg = self.cfg
+        x = embed(token, params["embed"])
+        window = jnp.int32(cfg.sliding_window if cfg.sliding_window else -1)
+
+        def ssm_step(x, inp):
+            p, conv, ssm = inp
+            h = rms_norm(x, p["ln"], cfg.norm_eps)
+            y, conv, ssm = mamba2_decode(h, p["ssm"], cfg, conv, ssm)
+            return x + y, (conv, ssm)
+
+        def group(carry, inp):
+            x, k_all, v_all = carry
+            pg, conv_g, ssm_g, i = inp
+            x, (conv_g, ssm_g) = scan_layers(ssm_step, x, (pg, conv_g, ssm_g),
+                                             cfg.unroll)
+            sp = params["shared"]
+            h = rms_norm(x, sp["ln1"], cfg.norm_eps)
+            ck = jax.lax.dynamic_index_in_dim(k_all, i, 0, keepdims=False)
+            cv = jax.lax.dynamic_index_in_dim(v_all, i, 0, keepdims=False)
+            o, ck, cv = attention_decode(h, sp["attn"], cfg, ck, cv, pos,
+                                         window)
+            k_all = jax.lax.dynamic_update_index_in_dim(
+                k_all, ck.astype(k_all.dtype), i, 0)
+            v_all = jax.lax.dynamic_update_index_in_dim(
+                v_all, cv.astype(v_all.dtype), i, 0)
+            x = x + o
+            h2 = rms_norm(x, sp["ln2"], cfg.norm_eps)
+            x = x + mlp(h2, sp["mlp"])
+            return (x, k_all, v_all), (conv_g, ssm_g)
+
+        idx = jnp.arange(self.n_groups)
+        (x, k, v), (conv, ssm) = scan_layers(
+            group, (x, cache["k"], cache["v"]),
+            (params["ssm_layers"], cache["conv"], cache["ssm"], idx),
+            cfg.unroll)
+        h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return unembed(h, params["embed"]), {"conv": conv, "ssm": ssm,
+                                             "k": k, "v": v}

@@ -1,0 +1,216 @@
+"""Transformer building blocks: RMSNorm, RoPE, GQA attention (full / causal /
+sliding-window, train + KV-cache decode), SwiGLU MLP.
+
+All functions are pure; parameters come in as dicts (see common.py).  The
+attention mask is parameterized by a *dynamic* per-layer window scalar
+(-1 = global) so heterogeneous layer patterns (gemma3's 5 local : 1 global)
+run under a single `lax.scan` body — no per-layer retracing.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ArchConfig, Spec
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding. x [b, s, h, hd], positions [b, s] (or [s])."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs     # [b, s, half]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+def attention_specs(cfg: ArchConfig, d_model: Optional[int] = None) -> Params:
+    d = d_model or cfg.d_model
+    hd = cfg.hd
+    dt = cfg.compute_dtype
+    return {
+        "wq": Spec((d, cfg.n_heads * hd), dt),
+        "wk": Spec((d, cfg.n_kv * hd), dt),
+        "wv": Spec((d, cfg.n_kv * hd), dt),
+        "wo": Spec((cfg.n_heads * hd, d), dt),
+    }
+
+
+def _window_mask(q_pos, k_pos, window, causal: bool):
+    """[.., sq] x [.., sk] positions -> additive mask [.., sq, sk].
+    window < 0 => unbounded (global); causal applies q >= k."""
+    diff = q_pos[..., :, None] - k_pos[..., None, :]
+    ok = jnp.ones(diff.shape, bool)
+    if causal:
+        ok &= diff >= 0
+    ok &= jnp.where(window >= 0, diff <= jnp.maximum(window, 0), True)
+    return ok
+
+
+def attention(
+    x: jnp.ndarray,                 # [b, s, d]
+    p: Params,
+    cfg: ArchConfig,
+    positions: jnp.ndarray,         # [b, s] absolute positions
+    window: jnp.ndarray,            # scalar int32; -1 = global
+    causal: bool = True,
+    kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,    # cross-attn K/V
+    kv_positions: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    b, s, _ = x.shape
+    hd = cfg.hd
+    q = jnp.einsum("bsd,dq->bsq", x, p["wq"]).reshape(b, s, cfg.n_heads, hd)
+    if kv is None:
+        k = jnp.einsum("bsd,dq->bsq", x, p["wk"]).reshape(b, s, cfg.n_kv, hd)
+        v = jnp.einsum("bsd,dq->bsq", x, p["wv"]).reshape(b, s, cfg.n_kv, hd)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        k_pos = positions
+    else:
+        k, v = kv                                        # [b, sk, n_kv, hd]
+        k_pos = kv_positions
+    return _attend(q, k, v, positions, k_pos, window, causal, p["wo"], cfg)
+
+
+def _attend_block(q, k, v, q_pos, k_pos, window, causal):
+    """Unchunked grouped-GQA core: q [b,sq,kv,g,hd] x k/v [b,sk,kv,hd] ->
+    [b,sq,kv,g,hd].  Never materializes a head-repeated KV copy — for
+    kv << n_heads (starcoder2: 4 vs 48) that repeat would cost 12x the
+    cache size in activation memory."""
+    hd = q.shape[-1]
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", q, k) \
+        / jnp.sqrt(hd).astype(jnp.float32)
+    ok = _window_mask(q_pos, k_pos, window, causal)[:, None, None, :, :]
+    scores = jnp.where(ok, scores.astype(jnp.float32), -1e30)
+    attn = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bkgqs,bskd->bqkgd", attn, v)
+
+
+def _attend(q, k, v, q_pos, k_pos, window, causal, wo, cfg: ArchConfig):
+    """Attention with query-block chunking: never materializes the full
+    [b, h, sq, sk] score tensor beyond one query block (production-required
+    at 32k+ context; the Pallas flash kernel is the further §Perf step)."""
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv                                          # GQA group size
+    qg = q.reshape(b, sq, kv, g, hd)
+    if q_pos.ndim == 1:
+        q_pos = q_pos[None, :]
+    if k_pos.ndim == 1:
+        k_pos = k_pos[None, :]
+    q_pos = jnp.broadcast_to(q_pos, (b, sq))
+    chunk = cfg.attn_q_chunk
+    if sq <= chunk or sq % chunk != 0:
+        o = _attend_block(qg, k, v, q_pos, k_pos, window, causal)
+    else:
+        from .scan_utils import scan_layers
+        nc = sq // chunk
+        qs = qg.reshape(b, nc, chunk, kv, g, hd).transpose(1, 0, 2, 3, 4, 5)
+        ps = q_pos.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+        def body(carry, inp):
+            qc, pc = inp
+            return carry, _attend_block(qc, k, v, pc, k_pos, window, causal)
+
+        _, os = scan_layers(body, 0, (qs, ps), cfg.unroll)
+        o = os.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, kv, g, hd)
+    return jnp.einsum("bqo,od->bqd", o.reshape(b, sq, h * hd), wo)
+
+
+def attention_decode(
+    x: jnp.ndarray,                 # [b, 1, d] current token(s)
+    p: Params,
+    cfg: ArchConfig,
+    cache_k: jnp.ndarray,           # [b, smax, n_kv, hd]
+    cache_v: jnp.ndarray,
+    pos: jnp.ndarray,               # [b] current position (cache fill level)
+    window: jnp.ndarray,            # scalar int32; -1 = global
+):
+    """One decode step: append K/V at `pos`, attend over the filled prefix
+    (optionally windowed).  Returns (out [b, 1, d], cache_k, cache_v)."""
+    b, s1, _ = x.shape
+    hd = cfg.hd
+    q = jnp.einsum("bsd,dq->bsq", x, p["wq"]).reshape(b, s1, cfg.n_heads, hd)
+    k = jnp.einsum("bsd,dq->bsq", x, p["wk"]).reshape(b, s1, cfg.n_kv, hd)
+    v = jnp.einsum("bsd,dq->bsq", x, p["wv"]).reshape(b, s1, cfg.n_kv, hd)
+    q = rope(q, pos[:, None], cfg.rope_theta)
+    k = rope(k, pos[:, None], cfg.rope_theta)
+    cache_k = _scatter_t(cache_k, k, pos)
+    cache_v = _scatter_t(cache_v, v, pos)
+
+    smax = cache_k.shape[1]
+    g = cfg.n_heads // cfg.n_kv
+    qg = q.reshape(b, s1, cfg.n_kv, g, hd)
+    # grouped GQA decode: contract against the raw cache, no head-repeat copy
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, cache_k) \
+        / jnp.sqrt(hd).astype(jnp.float32)
+    k_positions = jnp.arange(smax)[None, :]              # [1, smax]
+    valid = k_positions <= pos[:, None]
+    in_win = jnp.where(window >= 0,
+                       (pos[:, None] - k_positions) <= jnp.maximum(window, 0),
+                       True)
+    ok = (valid & in_win)[:, None, None, None, :]
+    scores = jnp.where(ok, scores.astype(jnp.float32), -1e30)
+    attn = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", attn, cache_v).reshape(
+        b, s1, cfg.n_heads * hd)
+    return jnp.einsum("bqo,od->bqd", o, p["wo"]), cache_k, cache_v
+
+
+def _scatter_t(cache, new, pos):
+    """Write new [b, 1, ...] into cache [b, smax, ...] at per-batch pos [b]."""
+    b = cache.shape[0]
+    return cache.at[jnp.arange(b), pos].set(new[:, 0].astype(cache.dtype))
+
+
+# ---------------------------------------------------------------------------
+def mlp_specs(cfg: ArchConfig, d_ff: Optional[int] = None) -> Params:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = cfg.compute_dtype
+    if cfg.mlp_gated:
+        return {"w_gate": Spec((d, f), dt), "w_up": Spec((d, f), dt),
+                "w_down": Spec((f, d), dt)}
+    return {"w_up": Spec((d, f), dt), "w_down": Spec((f, d), dt)}
+
+
+def mlp(x: jnp.ndarray, p: Params) -> jnp.ndarray:
+    if "w_gate" in p:                                    # SwiGLU
+        h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["w_gate"]))
+        h = h * jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    else:                                                # GELU (starcoder2 etc.)
+        h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w_up"]))
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+
+
+def embed_specs(cfg: ArchConfig) -> Params:
+    out = {"embedding": Spec((cfg.vocab, cfg.d_model), cfg.compute_dtype)}
+    if not cfg.tie_embeddings:
+        out["unembed"] = Spec((cfg.vocab, cfg.d_model), cfg.compute_dtype)
+    return out
+
+
+def embed(tokens: jnp.ndarray, p: Params) -> jnp.ndarray:
+    return p["embedding"][tokens]
+
+
+def unembed(x: jnp.ndarray, p: Params) -> jnp.ndarray:
+    table = p.get("unembed", p["embedding"])
+    return jnp.einsum("bsd,vd->bsv", x, table)

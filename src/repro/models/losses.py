@@ -1,0 +1,26 @@
+"""Shared LM loss.
+
+``cross_entropy`` avoids ``take_along_axis`` over the vocab axis: with
+vocab-sharded logits that gather would all-gather the full [B,S,V] logits
+tensor (hundreds of GB at assigned shapes).  The one-hot formulation reduces
+*locally* over each vocab shard and lets XLA finish with an all-reduce of
+[B,S] scalars instead.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean CE over positions with label >= 0.  logits [b, s, v] (any dtype),
+    labels [b, s] int."""
+    lg = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(lg, axis=-1)
+    v = lg.shape[-1]
+    onehot = labels[..., None] == jax.lax.broadcasted_iota(
+        labels.dtype, (1, 1, v), 2)
+    gold = jnp.sum(jnp.where(onehot, lg, 0.0), axis=-1)
+    mask = labels >= 0
+    ce = jnp.where(mask, logz - gold, 0.0)
+    return jnp.sum(ce) / jnp.maximum(jnp.sum(mask), 1)

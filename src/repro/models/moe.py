@@ -1,0 +1,174 @@
+"""Mixture-of-Experts layer: top-k routing with sort-based capacity dispatch.
+
+TPU/SPMD-friendly formulation (MegaBlocks-lite): token→expert assignments are
+sorted by expert id, positions-within-expert computed with a cumsum, tokens
+scattered into a dense ``[E, C, d]`` buffer (capacity-dropped), experts run as
+one batched matmul (``E`` leading dim shards over the model/data axes for
+expert parallelism), and results gather back weighted by the router gates.
+No ``[T, E, C]`` one-hot tensors are ever materialized.
+
+Supports shared experts (qwen2-moe: 4 shared + 60 routed top-4) and the
+auxiliary load-balancing loss (Switch-style).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ArchConfig, Spec
+from .layers import mlp, mlp_specs
+
+Params = Dict[str, jnp.ndarray]
+
+
+def moe_specs(cfg: ArchConfig) -> Params:
+    d, fe = cfg.d_model, cfg.d_expert
+    dt = cfg.compute_dtype
+    out = {
+        "router": Spec((d, cfg.n_experts), jnp.float32),
+        "w_gate": Spec((cfg.n_experts, d, fe), dt),
+        "w_up": Spec((cfg.n_experts, d, fe), dt),
+        "w_down": Spec((cfg.n_experts, fe, d), dt),
+    }
+    if cfg.n_shared_experts:
+        out["shared"] = mlp_specs(cfg, d_ff=cfg.n_shared_experts * cfg.d_expert)
+    return out
+
+
+def _capacity(n_tokens: int, cfg: ArchConfig) -> int:
+    c = int(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts) + 1
+    return max(8, -(-c // 8) * 8)           # round up to 8
+
+
+def moe(x: jnp.ndarray, p: Params, cfg: ArchConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x [b, s, d] -> (y [b, s, d], aux_loss scalar)."""
+    b, s, d = x.shape
+    t = b * s
+    k = cfg.top_k
+    e = cfg.n_experts
+    cap = _capacity(t, cfg)
+    xt = x.reshape(t, d)
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)       # [t, k]
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # Switch-style aux loss: E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.zeros(e, jnp.float32).at[expert_ids.reshape(-1)].add(1.0) / (t * k)
+    aux = e * jnp.sum(me * ce)
+
+    # --- sort-based dispatch ------------------------------------------------
+    flat_e = expert_ids.reshape(-1)                        # [t*k]
+    flat_g = gate_vals.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(t), k)
+    order = jnp.argsort(flat_e)
+    se, sg, stok = flat_e[order], flat_g[order], flat_tok[order]
+    # position within expert group = rank - start_of_group
+    counts = jnp.zeros(e, jnp.int32).at[se].add(1)
+    starts = jnp.concatenate([jnp.zeros(1, jnp.int32), jnp.cumsum(counts)[:-1]])
+    pos_in_e = jnp.arange(t * k) - starts[se]
+    keep = pos_in_e < cap                                  # capacity drop
+
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    buf = buf.at[jnp.where(keep, se, 0),
+                 jnp.where(keep, pos_in_e, 0)].add(
+        jnp.where(keep[:, None], xt[stok], 0).astype(x.dtype))
+
+    # --- batched expert FFN (E shards over mesh axes) ------------------------
+    # EP hint: experts over dp axes when divisible, else capacity over 'data'
+    # (keeps the [E, C, d] dispatch buffer from replicating at 235B scale).
+    from ..distributed.hints import constrain, dp_axes, mesh_axis_size
+    dp = dp_axes()
+    if dp is not None and e % mesh_axis_size(dp) == 0:
+        buf = constrain(buf, dp, None, None)
+    else:
+        buf = constrain(buf, None, "data", None)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+
+    # --- gather back, weighted by gates --------------------------------------
+    vals = out_buf[jnp.where(keep, se, 0), jnp.where(keep, pos_in_e, 0)]
+    vals = jnp.where(keep[:, None], vals, 0)
+    yt = jnp.zeros((t, d), jnp.float32).at[stok].add(
+        vals.astype(jnp.float32) * sg[:, None])
+    y = yt.astype(x.dtype).reshape(b, s, d)
+
+    if cfg.n_shared_experts:
+        y = y + mlp(x, p["shared"])
+    return y, aux
+
+
+def moe_local(x: jnp.ndarray, p: Params, cfg: ArchConfig
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Block-local dispatch variant (§Perf `localdisp`): the token->expert
+    sort runs independently inside each data-parallel block, so routing
+    generates only the canonical EP all-to-all of the dispatch buffers
+    instead of global-sort collectives over [T*k] token ids.
+
+    Semantics vs `moe`: identical routing; capacity is enforced per block
+    (T/nb * k / E per block) which drops slightly more tokens under skewed
+    routing — the standard EP trade."""
+    from ..distributed.hints import constrain, dp_axes, mesh_axis_size
+    b, s, d = x.shape
+    t = b * s
+    k, e = cfg.top_k, cfg.n_experts
+    dp = dp_axes()
+    nb = mesh_axis_size(dp) if dp is not None else 1
+    if t % nb != 0 or nb <= 1:
+        return moe(x, p, cfg)
+    tb = t // nb
+    cap = _capacity(tb, cfg)
+    xt = x.reshape(nb, tb, d)
+    xt = constrain(xt, dp, None, None)
+
+    logits = jnp.einsum("ntd,de->nte", xt.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)        # [nb, tb, k]
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.zeros(e, jnp.float32).at[expert_ids.reshape(-1)].add(1.0) / (t * k)
+    aux = e * jnp.sum(me * ce)
+
+    flat_e = expert_ids.reshape(nb, tb * k)                # block-local sort
+    flat_g = gate_vals.reshape(nb, tb * k)
+    flat_tok = jnp.tile(jnp.repeat(jnp.arange(tb), k)[None], (nb, 1))
+    order = jnp.argsort(flat_e, axis=1)
+    se = jnp.take_along_axis(flat_e, order, axis=1)
+    sg = jnp.take_along_axis(flat_g, order, axis=1)
+    stok = jnp.take_along_axis(flat_tok, order, axis=1)
+    blk = jnp.broadcast_to(jnp.arange(nb)[:, None], se.shape)
+
+    counts = jnp.zeros((nb, e), jnp.int32).at[blk, se].add(1)
+    starts = jnp.concatenate(
+        [jnp.zeros((nb, 1), jnp.int32), jnp.cumsum(counts, axis=1)[:, :-1]],
+        axis=1)
+    pos = jnp.arange(tb * k)[None, :] - starts[blk, se]
+    keep = pos < cap
+
+    buf = jnp.zeros((nb, e, cap, d), x.dtype)
+    buf = buf.at[jnp.where(keep, blk, 0), jnp.where(keep, se, 0),
+                 jnp.where(keep, pos, 0)].add(
+        jnp.where(keep[..., None], xt[blk, stok], 0).astype(x.dtype))
+    buf = constrain(buf, dp, None, None, None)
+
+    # expert matmul: weights are E-sharded (EP) -> XLA inserts the
+    # block->expert all-to-all here (the canonical EP exchange).
+    h = jax.nn.silu(jnp.einsum("necd,edf->necf", buf, p["w_gate"]))
+    h = h * jnp.einsum("necd,edf->necf", buf, p["w_up"])
+    out_buf = jnp.einsum("necf,efd->necd", h, p["w_down"])
+
+    vals = out_buf[jnp.where(keep, blk, 0), jnp.where(keep, se, 0),
+                   jnp.where(keep, pos, 0)]
+    vals = jnp.where(keep[..., None], vals, 0)
+    yt = jnp.zeros((nb, tb, d), jnp.float32).at[blk, stok].add(
+        vals.astype(jnp.float32) * sg[..., None])
+    y = yt.astype(x.dtype).reshape(b, s, d)
+    if cfg.n_shared_experts:
+        y = y + mlp(x, p["shared"])
+    return y, aux

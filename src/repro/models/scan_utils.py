@@ -1,0 +1,29 @@
+"""Scan-or-unroll helper.
+
+The multi-pod dry-run keeps ``lax.scan`` over layers (small HLO, fast
+compiles, realistic schedule).  The roofline accounting however needs
+per-layer costs, and XLA's cost_analysis counts a while-loop body ONCE
+regardless of trip count — so the depth-delta compiles set
+``cfg.unroll=True`` which expands layers as a python loop (every instance
+counted).  See distributed/hlo_analysis.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def scan_layers(body, carry, xs, unroll: bool = False):
+    """Drop-in for ``jax.lax.scan(body, carry, xs)`` with optional unroll."""
+    if not unroll:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        x_i = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is None:
+        return carry, None
+    stacked = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    return carry, stacked

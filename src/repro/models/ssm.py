@@ -1,0 +1,254 @@
+"""State-space blocks: Mamba-1 (selective scan, diagonal A) and Mamba-2 (SSD).
+
+TPU adaptation notes (DESIGN.md §2):
+* Mamba-1 — the CUDA selective-scan kernel becomes a *chunked associative
+  scan*: `lax.scan` over sequence chunks with a parallel `associative_scan`
+  inside each chunk, so the materialized decay tensors stay
+  ``[b, chunk, d_inner, d_state]`` instead of ``[b, s, ...]``.
+* Mamba-2 — implemented in the SSD block-matmul decomposition (intra-chunk
+  attention-like term + inter-chunk state passing), which maps the recurrence
+  onto MXU matmuls instead of elementwise scans.
+
+Both provide a one-step ``*_decode`` path carrying ``(conv_state, ssm_state)``
+for serving.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ArchConfig, Spec
+from .layers import rms_norm
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 (falcon-mamba)
+# ---------------------------------------------------------------------------
+def mamba1_specs(cfg: ArchConfig) -> Params:
+    d, di, ds = cfg.d_model, cfg.d_inner, cfg.d_state
+    dtr = cfg.dt_rank or max(16, d // 16)
+    dt = cfg.compute_dtype
+    return {
+        "in_proj": Spec((d, 2 * di), dt),
+        "conv_w": Spec((cfg.conv_kernel, di), dt),
+        "conv_b": Spec((di,), dt, init="zeros"),
+        "x_proj": Spec((di, dtr + 2 * ds), dt),
+        "dt_proj": Spec((dtr, di), dt),
+        "dt_bias": Spec((di,), jnp.float32, init="zeros"),
+        "a_log": Spec((di, ds), jnp.float32, init="small", scale=0.1),
+        "d_skip": Spec((di,), jnp.float32, init="ones"),
+        "out_proj": Spec((di, d), dt),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv over seq. x [b, s, c], w [k, c]."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(k):
+        out = out + xp[:, i:i + x.shape[1], :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _mamba1_core(xc, dt, bmat, cmat, a, d_skip, h0, chunk: int):
+    """Chunked selective scan.
+    xc [b,s,di], dt [b,s,di] (softplus'd), bmat/cmat [b,s,ds], a [di,ds] (<0).
+    h0 [b,di,ds].  Returns (y [b,s,di], h_final)."""
+    b, s, di = xc.shape
+    ds = bmat.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        xc = jnp.pad(xc, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    nc = xc.shape[1] // chunk
+    xs = (xc.reshape(b, nc, chunk, di).transpose(1, 0, 2, 3),
+          dt.reshape(b, nc, chunk, di).transpose(1, 0, 2, 3),
+          bmat.reshape(b, nc, chunk, ds).transpose(1, 0, 2, 3),
+          cmat.reshape(b, nc, chunk, ds).transpose(1, 0, 2, 3))
+
+    def chunk_body(h, inp):
+        xck, dtk, bk, ck = inp                           # [b, ck, ...]
+        decay = jnp.exp(dtk[..., None] * a[None, None])  # [b, ck, di, ds]
+        u = (dtk * xck)[..., None] * bk[:, :, None, :]   # [b, ck, di, ds]
+
+        def comb(l, r):
+            al, ul = l
+            ar, ur = r
+            return al * ar, ar * ul + ur
+
+        a_cum, u_cum = jax.lax.associative_scan(comb, (decay, u), axis=1)
+        hs = a_cum * h[:, None] + u_cum                  # [b, ck, di, ds]
+        y = jnp.einsum("bcds,bcs->bcd", hs, ck)
+        return hs[:, -1], y
+
+    h_final, ys = jax.lax.scan(chunk_body, h0, xs)
+    y = ys.transpose(1, 0, 2, 3).reshape(b, nc * chunk, di)[:, :s]
+    return y + xc[:, :s] * d_skip[None, None], h_final
+
+
+def mamba1(x: jnp.ndarray, p: Params, cfg: ArchConfig,
+           chunk: int = 64) -> jnp.ndarray:
+    """Train/prefill forward. x [b, s, d] -> [b, s, d]."""
+    di, ds = cfg.d_inner, cfg.d_state
+    dtr = cfg.dt_rank or max(16, cfg.d_model // 16)
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xc, z = xz[..., :di], xz[..., di:]
+    xc = jax.nn.silu(_causal_conv(xc, p["conv_w"], p["conv_b"]))
+    proj = jnp.einsum("bsd,de->bse", xc, p["x_proj"]).astype(jnp.float32)
+    dt_low, bmat, cmat = (proj[..., :dtr], proj[..., dtr:dtr + ds],
+                          proj[..., dtr + ds:])
+    dt = jax.nn.softplus(dt_low @ p["dt_proj"].astype(jnp.float32)
+                         + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    h0 = jnp.zeros((x.shape[0], di, ds), jnp.float32)
+    y, _ = _mamba1_core(xc.astype(jnp.float32), dt, bmat, cmat, a,
+                        p["d_skip"], h0, chunk)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    return jnp.einsum("bsd,de->bse", y, p["out_proj"])
+
+
+def mamba1_decode(x, p, cfg: ArchConfig, conv_state, ssm_state):
+    """One token step. x [b, 1, d]; conv_state [b, k-1, di];
+    ssm_state [b, di, ds] (fp32)."""
+    di, ds = cfg.d_inner, cfg.d_state
+    dtr = cfg.dt_rank or max(16, cfg.d_model // 16)
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xc, z = xz[..., :di], xz[..., di:]
+    window = jnp.concatenate([conv_state, xc.astype(conv_state.dtype)], axis=1)
+    new_conv = window[:, 1:]
+    w = p["conv_w"].astype(jnp.float32)
+    xconv = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), w) \
+        + p["conv_b"].astype(jnp.float32)
+    xc1 = jax.nn.silu(xconv)                              # [b, di]
+    proj = (xc1 @ p["x_proj"].astype(jnp.float32))
+    dt_low, bvec, cvec = (proj[..., :dtr], proj[..., dtr:dtr + ds],
+                          proj[..., dtr + ds:])
+    dt = jax.nn.softplus(dt_low @ p["dt_proj"].astype(jnp.float32)
+                         + p["dt_bias"])                  # [b, di]
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dt[..., None] * a[None])              # [b, di, ds]
+    h = decay * ssm_state + (dt * xc1)[..., None] * bvec[:, None, :]
+    y = jnp.einsum("bds,bs->bd", h, cvec) + xc1 * p["d_skip"][None]
+    y = (y.astype(x.dtype))[:, None, :] * jax.nn.silu(z)
+    return jnp.einsum("bsd,de->bse", y, p["out_proj"]), new_conv, h
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 / SSD (zamba2)
+# ---------------------------------------------------------------------------
+def mamba2_specs(cfg: ArchConfig) -> Params:
+    d, di, ds = cfg.d_model, cfg.d_inner, cfg.d_state
+    nh = di // cfg.ssm_head_dim
+    dt = cfg.compute_dtype
+    return {
+        "in_proj": Spec((d, 2 * di + 2 * ds + nh), dt),
+        "conv_w": Spec((cfg.conv_kernel, di + 2 * ds), dt),
+        "conv_b": Spec((di + 2 * ds,), dt, init="zeros"),
+        "a_log": Spec((nh,), jnp.float32, init="small", scale=0.5),
+        "dt_bias": Spec((nh,), jnp.float32, init="zeros"),
+        "d_skip": Spec((nh,), jnp.float32, init="ones"),
+        "norm_w": Spec((di,), dt, init="ones"),
+        "out_proj": Spec((di, d), dt),
+    }
+
+
+def _ssd_core(xh, dt, bmat, cmat, a_log, h0, chunk: int):
+    """SSD block decomposition.
+    xh [b,s,H,hd] (fp32), dt [b,s,H] (softplus'd), bmat/cmat [b,s,ds],
+    a_log [H].  h0 [b,H,hd,ds].  Returns (y [b,s,H,hd], h_final)."""
+    b, s, nh, hd = xh.shape
+    ds = bmat.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    nc = xh.shape[1] // chunk
+    xs = (xh.reshape(b, nc, chunk, nh, hd).transpose(1, 0, 2, 3, 4),
+          dt.reshape(b, nc, chunk, nh).transpose(1, 0, 2, 3),
+          bmat.reshape(b, nc, chunk, ds).transpose(1, 0, 2, 3),
+          cmat.reshape(b, nc, chunk, ds).transpose(1, 0, 2, 3))
+    a = -jnp.exp(a_log)                                   # [H] < 0
+
+    def chunk_body(h, inp):
+        xk, dtk, bk, ck = inp                             # [b,ck,...]
+        la = jnp.cumsum(dtk * a[None, None], axis=1)      # [b,ck,H] log decay
+        # intra-chunk: att[i,j] = (C_i·B_j) exp(la_i - la_j) dt_j,  j <= i
+        cb = jnp.einsum("bis,bjs->bij", ck, bk)           # [b,ck,ck]
+        ldiff = la[:, :, None, :] - la[:, None, :, :]     # [b,i,j,H]
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+        att = jnp.where(causal[None, :, :, None],
+                        cb[..., None] * jnp.exp(ldiff), 0.0)
+        att = att * dtk[:, None, :, :]                    # weight by dt_j
+        y_intra = jnp.einsum("bijh,bjhd->bihd", att, xk)
+        # inter-chunk: y_i += exp(la_i) * C_i · S_prev
+        y_inter = jnp.einsum("bis,bhds->bihd",
+                             ck, h) * jnp.exp(la)[..., None]
+        # state update: S_new = exp(la_end) S_prev + sum_j exp(la_end-la_j) dt_j x_j B_j^T
+        w_j = jnp.exp(la[:, -1:, :] - la) * dtk           # [b,ck,H]
+        s_chunk = jnp.einsum("bjh,bjhd,bjs->bhds", w_j, xk, bk)
+        h_new = jnp.exp(la[:, -1])[:, :, None, None] * h + s_chunk
+        return h_new, y_intra + y_inter
+
+    h_final, ys = jax.lax.scan(chunk_body, h0, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, nc * chunk, nh, hd)[:, :s]
+    return y, h_final
+
+
+def mamba2(x: jnp.ndarray, p: Params, cfg: ArchConfig,
+           chunk: int = 128) -> jnp.ndarray:
+    di, ds = cfg.d_inner, cfg.d_state
+    nh = di // cfg.ssm_head_dim
+    hd = cfg.ssm_head_dim
+    proj = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, rest = proj[..., :di], proj[..., di:]
+    xbc, dt_raw = rest[..., : di + 2 * ds], rest[..., di + 2 * ds:]
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+    xc, bmat, cmat = (xbc[..., :di], xbc[..., di:di + ds],
+                      xbc[..., di + ds:])
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    b, s, _ = x.shape
+    xh = xc.astype(jnp.float32).reshape(b, s, nh, hd)
+    h0 = jnp.zeros((b, nh, hd, ds), jnp.float32)
+    y, _ = _ssd_core(xh, dt, bmat.astype(jnp.float32),
+                     cmat.astype(jnp.float32), p["a_log"], h0, chunk)
+    y = y + xh * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    return jnp.einsum("bsd,de->bse", y, p["out_proj"])
+
+
+def mamba2_decode(x, p, cfg: ArchConfig, conv_state, ssm_state):
+    """x [b,1,d]; conv_state [b,k-1,di+2ds]; ssm_state [b,H,hd,ds] fp32."""
+    di, ds = cfg.d_inner, cfg.d_state
+    nh = di // cfg.ssm_head_dim
+    hd = cfg.ssm_head_dim
+    proj = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, rest = proj[..., :di], proj[..., di:]
+    xbc, dt_raw = rest[..., : di + 2 * ds], rest[..., di + 2 * ds:]
+    window = jnp.concatenate([conv_state, xbc.astype(conv_state.dtype)], axis=1)
+    new_conv = window[:, 1:]
+    w = p["conv_w"].astype(jnp.float32)
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), w) \
+        + p["conv_b"].astype(jnp.float32)
+    xbc1 = jax.nn.silu(conv_out)
+    xc, bvec, cvec = (xbc1[..., :di], xbc1[..., di:di + ds],
+                      xbc1[..., di + ds:])
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])  # [b,H]
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dt * a[None])                          # [b,H]
+    xh = xc.reshape(-1, nh, hd)
+    h = decay[:, :, None, None] * ssm_state \
+        + (dt[:, :, None] * xh)[..., None] * bvec[:, None, None, :]
+    y = jnp.einsum("bhds,bs->bhd", h, cvec) + xh * p["d_skip"][None, :, None]
+    y = y.reshape(-1, 1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    return jnp.einsum("bsd,de->bse", y, p["out_proj"]), new_conv, h

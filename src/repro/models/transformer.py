@@ -1,0 +1,232 @@
+"""Decoder-only transformer LM (dense + MoE + VLM-backbone variants).
+
+Layers run under a single ``lax.scan`` over stacked parameters, with the
+attention window passed as *data* (int32 per layer, -1 = global) so
+heterogeneous patterns (gemma3's 5 local : 1 global) share one scan body and
+compile to one while loop.  MoE layers use the sort-based dispatch in
+``moe.py``.
+
+Three entry points per model:
+  ``loss``        — training step objective (causal LM CE + MoE aux)
+  ``prefill``     — prompt forward that also fills the KV cache
+  ``decode_step`` — single-token step against the cache (serving)
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ArchConfig, Params, Spec
+from .layers import (attention, attention_decode, embed, embed_specs,
+                     attention_specs, mlp, mlp_specs, rms_norm, rope, unembed)
+from .moe import moe, moe_local, moe_specs
+from .scan_utils import scan_layers
+
+
+def window_pattern(cfg: ArchConfig) -> np.ndarray:
+    """Per-layer attention window (int32, -1 = global)."""
+    if cfg.sliding_window is None:
+        return np.full(cfg.n_layers, -1, np.int32)
+    w = np.full(cfg.n_layers, cfg.sliding_window, np.int32)
+    if cfg.global_every:
+        w[cfg.global_every - 1::cfg.global_every] = -1    # every Nth global
+    return w
+
+
+class DecoderLM:
+    """Config-driven decoder-only LM."""
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.is_moe = cfg.family == "moe"
+        self.windows = jnp.asarray(window_pattern(cfg))
+
+    # -- parameters ---------------------------------------------------------
+    def _layer_specs(self) -> Params:
+        cfg = self.cfg
+        dt = cfg.compute_dtype
+        sp = {
+            "ln1": Spec((cfg.d_model,), dt, init="ones"),
+            "ln2": Spec((cfg.d_model,), dt, init="ones"),
+            "attn": attention_specs(cfg),
+        }
+        sp["ffn"] = moe_specs(cfg) if self.is_moe else mlp_specs(cfg)
+        return sp
+
+    def param_specs(self) -> Params:
+        cfg = self.cfg
+        stack = jax.tree.map(
+            lambda s: Spec((cfg.n_layers,) + s.shape, s.dtype, s.init, s.scale),
+            self._layer_specs(), is_leaf=lambda v: isinstance(v, Spec))
+        out = {
+            "embed": embed_specs(cfg),
+            "layers": stack,
+            "final_norm": Spec((cfg.d_model,), cfg.compute_dtype, init="ones"),
+        }
+        if cfg.n_patches:                                 # VLM stub projector
+            out["patch_proj"] = Spec((cfg.d_model, cfg.d_model),
+                                     cfg.compute_dtype)
+        return out
+
+    # -- forward (training / scoring) ----------------------------------------
+    def _layer(self, x, p, window, positions):
+        cfg = self.cfg
+        if cfg.seq_parallel:
+            # Megatron-SP: residual stream sharded over sequence on the
+            # model axis between blocks; XLA places the all-gather /
+            # reduce-scatter pair around attention/MLP.
+            from ..distributed.hints import constrain, dp_axes
+            x = constrain(x, dp_axes(), "model", None)
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        x = x + attention(h, p["attn"], cfg, positions, window, causal=True)
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if self.is_moe:
+            moe_fn = moe_local if cfg.moe_local_dispatch else moe
+            y, aux = moe_fn(h, p["ffn"], cfg)
+        else:
+            y, aux = mlp(h, p["ffn"]), jnp.float32(0.0)
+        return x + y, aux
+
+    def hidden_states(self, params: Params, x: jnp.ndarray,
+                      positions: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        cfg = self.cfg
+        body = self._layer
+        if cfg.remat and cfg.remat_policy != "none":
+            pol = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                   if cfg.remat_policy == "dots" else None)
+            body = jax.remat(body, policy=pol)
+
+        def scan_fn(x, inp):
+            p, w = inp
+            x, aux = body(x, p, w, positions)
+            return x, aux
+
+        x, auxs = scan_layers(scan_fn, x, (params["layers"], self.windows), self.cfg.unroll)
+        return rms_norm(x, params["final_norm"], cfg.norm_eps), jnp.sum(auxs)
+
+    def inputs_embeds(self, params: Params, tokens: jnp.ndarray,
+                      patches: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+        x = embed(tokens, params["embed"])
+        if self.cfg.n_patches and patches is not None:
+            pe = jnp.einsum("bpd,de->bpe", patches.astype(x.dtype),
+                            params["patch_proj"])
+            x = jnp.concatenate([pe, x], axis=1)
+        return x
+
+    def logits(self, params: Params, tokens: jnp.ndarray,
+               patches: Optional[jnp.ndarray] = None):
+        x = self.inputs_embeds(params, tokens, patches)
+        positions = jnp.arange(x.shape[1])[None, :]
+        h, aux = self.hidden_states(params, x, positions)
+        return unembed(h, params["embed"]), aux
+
+    def loss(self, params: Params, batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        """batch: tokens [b, s], labels [b, s] (-1 = ignore), optional
+        patches [b, p, d]."""
+        logits, aux = self.logits(params, batch["tokens"],
+                                  batch.get("patches"))
+        labels = batch["labels"]
+        if self.cfg.n_patches and "patches" in batch:
+            pad = jnp.full(batch["patches"].shape[:2], -1, labels.dtype)
+            labels = jnp.concatenate([pad, labels], axis=1)
+        from .losses import cross_entropy
+        return cross_entropy(logits, labels) + 0.01 * aux
+
+    # -- serving --------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int) -> Params:
+        cfg = self.cfg
+        shape = (cfg.n_layers, batch, max_len, cfg.n_kv, cfg.hd)
+        return {"k": jnp.zeros(shape, cfg.compute_dtype),
+                "v": jnp.zeros(shape, cfg.compute_dtype)}
+
+    def cache_specs(self, batch: int, max_len: int) -> Params:
+        cfg = self.cfg
+        shape = (cfg.n_layers, batch, max_len, cfg.n_kv, cfg.hd)
+        return {"k": jax.ShapeDtypeStruct(shape, cfg.compute_dtype),
+                "v": jax.ShapeDtypeStruct(shape, cfg.compute_dtype)}
+
+    def prefill(self, params: Params, tokens: jnp.ndarray, cache: Params,
+                patches: Optional[jnp.ndarray] = None):
+        """Prompt forward; returns (last-token logits, filled cache)."""
+        cfg = self.cfg
+        x = self.inputs_embeds(params, tokens, patches)
+        s = x.shape[1]
+        positions = jnp.arange(s)[None, :]
+
+        def scan_fn(x, inp):
+            p, w = inp
+            h = rms_norm(x, p["ln1"], cfg.norm_eps)
+            b = h.shape[0]
+            hd = cfg.hd
+            q = jnp.einsum("bsd,dq->bsq", h, p["attn"]["wq"]).reshape(
+                b, s, cfg.n_heads, hd)
+            k = jnp.einsum("bsd,dq->bsq", h, p["attn"]["wk"]).reshape(
+                b, s, cfg.n_kv, hd)
+            v = jnp.einsum("bsd,dq->bsq", h, p["attn"]["wv"]).reshape(
+                b, s, cfg.n_kv, hd)
+            q = rope(q, positions, cfg.rope_theta)
+            k = rope(k, positions, cfg.rope_theta)
+            from .layers import _attend
+            o = _attend(q, k, v, positions, positions, w, True,
+                        p["attn"]["wo"], cfg)
+            x = x + o
+            h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+            if self.is_moe:
+                moe_fn = moe_local if cfg.moe_local_dispatch else moe
+                y, _ = moe_fn(h2, p["ffn"], cfg)
+            else:
+                y = mlp(h2, p["ffn"])
+            return x + y, (k, v)
+
+        x, (ks, vs) = scan_layers(scan_fn, x, (params["layers"], self.windows), self.cfg.unroll)
+        h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = unembed(h[:, -1:], params["embed"])
+        smax = cache["k"].shape[2]
+        cache = {
+            "k": jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], ks.astype(cache["k"].dtype), 0, axis=2),
+            "v": jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], vs.astype(cache["v"].dtype), 0, axis=2),
+        }
+        return logits, cache
+
+    def decode_step(self, params: Params, token: jnp.ndarray,
+                    cache: Params, pos: jnp.ndarray):
+        """token [b, 1] int32, pos [b] current positions.
+        Returns (logits [b, 1, v], new cache).
+
+        The cache rides in the scan CARRY with per-layer in-place
+        ``dynamic_update_index_in_dim`` writes, so XLA aliases the donated
+        input cache to the output — decode never holds two cache copies."""
+        cfg = self.cfg
+        x = embed(token, params["embed"])
+
+        def scan_fn(carry, inp):
+            x, k_all, v_all = carry
+            p, w, i = inp
+            h = rms_norm(x, p["ln1"], cfg.norm_eps)
+            ck = jax.lax.dynamic_index_in_dim(k_all, i, 0, keepdims=False)
+            cv = jax.lax.dynamic_index_in_dim(v_all, i, 0, keepdims=False)
+            o, ck, cv = attention_decode(h, p["attn"], cfg, ck, cv, pos, w)
+            k_all = jax.lax.dynamic_update_index_in_dim(
+                k_all, ck.astype(k_all.dtype), i, 0)
+            v_all = jax.lax.dynamic_update_index_in_dim(
+                v_all, cv.astype(v_all.dtype), i, 0)
+            x = x + o
+            h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+            if self.is_moe:
+                moe_fn = moe_local if cfg.moe_local_dispatch else moe
+                y, _ = moe_fn(h2, p["ffn"], cfg)
+            else:
+                y = mlp(h2, p["ffn"])
+            return (x + y, k_all, v_all), None
+
+        idx = jnp.arange(cfg.n_layers)
+        (x, ks, vs), _ = scan_layers(
+            scan_fn, (x, cache["k"], cache["v"]),
+            (params["layers"], self.windows, idx), self.cfg.unroll)
+        h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return unembed(h, params["embed"]), {"k": ks, "v": vs}

@@ -1,0 +1,102 @@
+"""Continuous batching scheduler (vLLM-style slot model, host-side).
+
+Fixed ``n_slots`` decode lanes over one shared KV cache; requests are
+admitted into free slots as they arrive, prefilled individually, then decoded
+together in lockstep.  Finished slots (EOS or budget) free immediately —
+decode throughput is not gated on the slowest request in a batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .serve_step import make_serve_fns
+
+
+@dataclasses.dataclass
+class Request:
+    req_id: int
+    prompt: np.ndarray               # [t] int32
+    max_new: int
+    arrived_step: int = 0
+    output: Optional[List[int]] = None
+
+
+class ContinuousBatcher:
+    def __init__(self, model, params, n_slots: int = 8, max_len: int = 512,
+                 eos_id: int = 1, temperature: float = 0.0):
+        self.model = model
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.queue: deque = deque()
+        self.active: Dict[int, Request] = {}          # slot -> request
+        self.cache = model.init_cache(n_slots, max_len)
+        self.pos = np.zeros(n_slots, np.int32)
+        self.budget = np.zeros(n_slots, np.int32)
+        self.cur_tok = np.zeros((n_slots, 1), np.int32)
+        self.free = list(range(n_slots))
+        self.finished: List[Request] = []
+        self.prefill_fn, self.decode_fn = make_serve_fns(model, temperature)
+        self._key = jax.random.key(0)
+        self.steps = 0
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    # -- admission: prefill one request into a free slot ----------------------
+    def _admit(self):
+        while self.free and self.queue:
+            slot = self.free.pop()
+            req = self.queue.popleft()
+            req.output = []
+            t = len(req.prompt)
+            single = self.model.init_cache(1, self.max_len)
+            tok, single = self.prefill_fn(
+                self.params, jnp.asarray(req.prompt[None, :]), single)
+            # copy the single-request cache into the shared slot
+            self.cache = jax.tree.map(
+                lambda big, small: big.at[:, slot:slot + 1].set(small)
+                if big.ndim >= 2 else big, self.cache, single)
+            self.cur_tok[slot] = np.array(tok)[0]
+            req.output.append(int(tok[0, 0]))
+            self.pos[slot] = t
+            self.budget[slot] = req.max_new - 1
+            self.active[slot] = req
+
+    # -- one decode tick over all active slots --------------------------------
+    def step(self) -> int:
+        self._admit()
+        if not self.active:
+            return 0
+        self._key, sub = jax.random.split(self._key)
+        tok, _, self.cache = self.decode_fn(
+            self.params, jnp.asarray(self.cur_tok), self.cache,
+            jnp.asarray(self.pos), sub)
+        tok = np.asarray(tok)
+        self.steps += 1
+        done_slots = []
+        for slot, req in list(self.active.items()):
+            t = int(tok[slot, 0])
+            req.output.append(t)
+            self.pos[slot] += 1
+            self.budget[slot] -= 1
+            if t == self.eos_id or self.budget[slot] <= 0 \
+                    or self.pos[slot] >= self.max_len - 1:
+                done_slots.append(slot)
+        for slot in done_slots:
+            self.finished.append(self.active.pop(slot))
+            self.free.append(slot)
+        self.cur_tok = np.array(tok)
+        return len(self.active)
+
+    def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:
+        while (self.queue or self.active) and self.steps < max_steps:
+            self.step()
+        return self.finished

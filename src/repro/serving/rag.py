@@ -1,0 +1,97 @@
+"""Spatio-temporal RAG pipeline — CubeGraph's application layer (the paper's
+title use case): embed query -> filtered top-k retrieval (CubeGraph) ->
+context assembly -> generation on any assigned backbone.
+
+The document store holds (embedding, metadata, token span) triples; the
+query embedder is a learned linear projection stub (a real deployment plugs
+in its encoder — orthogonal to the paper's contribution).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import CubeGraphConfig, CubeGraphIndex, Filter
+from .serve_step import generate
+
+
+@dataclasses.dataclass
+class Document:
+    doc_id: int
+    tokens: np.ndarray              # [t] int32 token span
+    embedding: np.ndarray           # [d_emb]
+    metadata: np.ndarray            # [m] (lon, lat, t, ...)
+
+
+class DocumentStore:
+    def __init__(self, docs: Sequence[Document],
+                 index_cfg: CubeGraphConfig = CubeGraphConfig()):
+        self.docs = list(docs)
+        x = np.stack([d.embedding for d in self.docs]).astype(np.float32)
+        s = np.stack([d.metadata for d in self.docs]).astype(np.float64)
+        self.index = CubeGraphIndex.build(x, s, index_cfg)
+
+    def retrieve(self, query_emb: np.ndarray, filt: Filter, k: int,
+                 ef: int = 64) -> List[List[Document]]:
+        ids, _ = self.index.query(np.atleast_2d(query_emb), filt, k=k, ef=ef)
+        return [[self.docs[i] for i in row if i >= 0]
+                for row in np.asarray(ids)]
+
+    def insert(self, docs: Sequence[Document]):
+        x = np.stack([d.embedding for d in docs]).astype(np.float32)
+        s = np.stack([d.metadata for d in docs]).astype(np.float64)
+        self.index.insert_batch(x, s)
+        self.docs.extend(docs)
+
+
+class RAGPipeline:
+    """retrieve -> assemble -> generate."""
+
+    SEP = 0                          # separator token id (synthetic vocab)
+
+    def __init__(self, store: DocumentStore, model, params,
+                 query_proj: Optional[np.ndarray] = None,
+                 max_context: int = 512):
+        self.store = store
+        self.model = model
+        self.params = params
+        self.max_context = max_context
+        d_emb = store.docs[0].embedding.shape[0]
+        if query_proj is None:
+            rng = np.random.default_rng(0)
+            query_proj = (rng.normal(size=(model.cfg.d_model, d_emb))
+                          / np.sqrt(model.cfg.d_model)).astype(np.float32)
+        self.query_proj = query_proj
+
+    def embed_query(self, query_tokens: np.ndarray) -> np.ndarray:
+        """Stub encoder: mean-pooled token embeddings projected to doc space."""
+        emb_table = np.asarray(
+            jax.device_get(self.params["embed"]["embedding"]),
+            np.float32)
+        pooled = emb_table[query_tokens].mean(axis=-2)       # [.., d_model]
+        return pooled @ self.query_proj                       # [.., d_emb]
+
+    def assemble(self, docs: List[Document],
+                 query_tokens: np.ndarray) -> np.ndarray:
+        ctx: List[int] = []
+        for d in docs:
+            remaining = self.max_context - len(ctx) - len(query_tokens) - 1
+            if remaining <= 0:
+                break
+            ctx.extend(d.tokens[:remaining].tolist())
+            ctx.append(self.SEP)
+        prompt = np.asarray(ctx + query_tokens.tolist(), np.int32)
+        return prompt
+
+    def answer(self, query_tokens: np.ndarray, filt: Filter, k: int = 4,
+               max_new: int = 16, ef: int = 64) -> Tuple[np.ndarray, List[Document]]:
+        q_emb = self.embed_query(query_tokens)
+        docs = self.store.retrieve(q_emb, filt, k, ef=ef)[0]
+        prompt = self.assemble(docs, query_tokens)
+        out = generate(self.model, self.params, prompt[None, :],
+                       max_new=max_new)
+        return np.asarray(out)[0], docs

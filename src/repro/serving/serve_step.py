@@ -1,0 +1,70 @@
+"""Serving steps: prefill + decode with sampling, built on the model API's
+KV/state caches.  ``make_serve_fns`` returns jitted callables shared by the
+RAG pipeline, the continuous-batching scheduler, and the dry-run."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+def sample_logits(logits: jnp.ndarray, key: jax.Array,
+                  temperature: float = 0.0, top_k: int = 0) -> jnp.ndarray:
+    """logits [b, 1, v] -> tokens [b, 1]."""
+    lg = logits[:, -1, :].astype(jnp.float32)
+    if temperature <= 0.0:
+        return jnp.argmax(lg, axis=-1)[:, None].astype(jnp.int32)
+    lg = lg / temperature
+    if top_k > 0:
+        kth = jax.lax.top_k(lg, top_k)[0][:, -1:]
+        lg = jnp.where(lg < kth, -jnp.inf, lg)
+    return jax.random.categorical(key, lg, axis=-1)[:, None].astype(jnp.int32)
+
+
+def make_serve_fns(model, temperature: float = 0.0, top_k: int = 0):
+    """Returns (prefill_fn, decode_fn):
+    prefill_fn(params, tokens, cache, extra=None) -> (next_token, cache)
+    decode_fn(params, token, cache, pos, key) -> (next_token, logits, cache)
+    """
+
+    @jax.jit
+    def prefill_fn(params, tokens, cache, extra=None):
+        if extra is not None:
+            logits, cache = model.prefill(params, tokens, cache, extra)
+        else:
+            logits, cache = model.prefill(params, tokens, cache)
+        nxt = jnp.argmax(logits[:, -1, :].astype(jnp.float32),
+                         axis=-1)[:, None].astype(jnp.int32)
+        return nxt, cache
+
+    @jax.jit
+    def decode_fn(params, token, cache, pos, key):
+        logits, cache = model.decode_step(params, token, cache, pos)
+        nxt = sample_logits(logits, key, temperature, top_k)
+        return nxt, logits, cache
+
+    return prefill_fn, decode_fn
+
+
+def generate(model, params, prompt_tokens: jnp.ndarray, max_new: int,
+             max_len: Optional[int] = None, temperature: float = 0.0,
+             seed: int = 0, extra=None) -> jnp.ndarray:
+    """Greedy/temperature generation loop (host-driven)."""
+    b, s = prompt_tokens.shape
+    max_len = max_len or (s + max_new)
+    cache = model.init_cache(b, max_len)
+    prefill_fn, decode_fn = make_serve_fns(model, temperature)
+    tok, cache = prefill_fn(params, prompt_tokens, cache, extra)
+    out = [tok]
+    pos = jnp.full((b,), s, jnp.int32)
+    key = jax.random.key(seed)
+    for i in range(max_new - 1):
+        key, sub = jax.random.split(key)
+        tok, _, cache = decode_fn(params, tok, cache, pos, sub)
+        out.append(tok)
+        pos = pos + 1
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,109 @@
+"""Optimizer substrate: AdamW with cosine / WSD (warmup-stable-decay,
+MiniCPM) / constant schedules, global-norm gradient clipping.
+
+Pure JAX (no optax): state is a pytree {m, v} matching params, fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    schedule: str = "cosine"          # cosine | wsd | const
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    wsd_decay_frac: float = 0.1       # MiniCPM: final 10% exponential decay
+    min_lr_ratio: float = 0.1
+
+
+def schedule_lr(step: jnp.ndarray, cfg: OptConfig) -> jnp.ndarray:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "const":
+        post = jnp.float32(1.0)
+    elif cfg.schedule == "cosine":
+        frac = jnp.clip((s - cfg.warmup_steps)
+                        / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        post = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+            1 + jnp.cos(jnp.pi * frac))
+    elif cfg.schedule == "wsd":
+        decay_start = cfg.total_steps * (1 - cfg.wsd_decay_frac)
+        frac = jnp.clip((s - decay_start)
+                        / max(cfg.total_steps - decay_start, 1), 0.0, 1.0)
+        post = jnp.exp(jnp.log(jnp.maximum(cfg.min_lr_ratio, 1e-6)) * frac)
+    else:
+        raise ValueError(cfg.schedule)
+    return cfg.lr * warm * post
+
+
+def init_opt_state(params: Params) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def abstract_opt_state(param_specs: Params) -> Dict[str, Any]:
+    zeros = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, param_specs),
+            "v": jax.tree.map(zeros, param_specs),
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def global_norm(tree: Params) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads: Params, max_norm: float
+                        ) -> Tuple[Params, jnp.ndarray]:
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gn
+
+
+def adamw_update(params: Params, grads: Params, state: Dict[str, Any],
+                 cfg: OptConfig) -> Tuple[Params, Dict[str, Any], Dict[str, jnp.ndarray]]:
+    step = state["step"] + 1
+    lr = schedule_lr(step, cfg)
+    if cfg.grad_clip > 0:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        gnorm = global_norm(grads)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * gf
+        v = b2 * v + (1 - b2) * gf * gf
+        mh = m / bc1
+        vh = v / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, \
+        {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,66 @@
+"""Training step factory: microbatched gradient accumulation + AdamW.
+
+``make_train_step(model, opt_cfg, accum_steps)`` returns a pure function
+``(state, batch) -> (state, metrics)`` suitable for ``jax.jit`` with
+in/out shardings (see launch/train.py and launch/dryrun.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .optimizer import OptConfig, adamw_update, init_opt_state
+
+TrainState = Dict[str, Any]        # {params, opt: {m, v, step}}
+
+
+def init_train_state(params) -> TrainState:
+    return {"params": params, "opt": init_opt_state(params)}
+
+
+def make_train_step(model, opt_cfg: OptConfig, accum_steps: int = 1):
+    """Build the train step.  With ``accum_steps > 1`` the global batch is
+    split along axis 0 into microbatches processed under `lax.scan` (activation
+    memory / throughput trade — a §Perf lever)."""
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def train_step(state: TrainState, batch: Dict[str, jnp.ndarray]
+                   ) -> Tuple[TrainState, Dict[str, jnp.ndarray]]:
+        params = state["params"]
+        if accum_steps == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            from ..distributed.hints import constrain, dp_axes
+            dp = dp_axes()
+            # keep the BATCH dim sharded over dp after the reshape — without
+            # the constraint XLA may shard the accum axis instead, silently
+            # replicating each microbatch across the data axis.
+            micro = jax.tree.map(
+                lambda a: constrain(
+                    a.reshape((accum_steps, a.shape[0] // accum_steps)
+                              + a.shape[1:]), None, dp), batch)
+
+            def mb(carry, mb_batch):
+                acc_loss, acc_g = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb_batch)
+                return (acc_loss + l,
+                        jax.tree.map(lambda a, b: a + b.astype(a.dtype),
+                                     acc_g, g)), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(mb, (jnp.float32(0.0), zeros),
+                                            micro)
+            loss = loss / accum_steps
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+
+        new_params, opt, om = adamw_update(params, grads, state["opt"],
+                                           opt_cfg)
+        metrics = {"loss": loss, **om}
+        return {"params": new_params, "opt": opt}, metrics
+
+    return train_step

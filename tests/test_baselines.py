@@ -1,0 +1,81 @@
+"""Baseline behaviour matches the paper's qualitative claims (§2.2, §6.2)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CubeGraphConfig, CubeGraphIndex
+from repro.core.baselines import (AcornIndex, PostFilteringIndex,
+                                  PreFilteringIndex, TreeGraphIndex)
+from repro.core.filters import BoxFilter
+from repro.core.workloads import ground_truth, make_box_filter, make_dataset, recall
+
+
+@pytest.fixture(scope="module")
+def data():
+    x, s = make_dataset(3000, 32, 2, seed=1)
+    rng = np.random.default_rng(2)
+    q = x[rng.integers(0, 3000, 24)] + 0.05 * rng.normal(size=(24, 32)).astype(np.float32)
+    f = make_box_filter(2, 0.05, seed=3)
+    gt, _ = ground_truth(x, s, q, f, 10)
+    return x, s, q, f, gt
+
+
+def test_postfilter_pure_ann(data):
+    """Sanity: the monolithic graph is navigable (recall ~1 unfiltered)."""
+    x, s, q, f, gt = data
+    idx = PostFilteringIndex(x, s)
+    f_all = BoxFilter(lo=jnp.asarray([-1.0, -1.0]), hi=jnp.asarray([2.0, 2.0]))
+    gt_all, _ = ground_truth(x, s, q, f_all, 10)
+    ids, _ = idx.query(q, f_all, k=10, ef=64)
+    assert recall(ids, gt_all) >= 0.95
+
+
+def test_postfilter_degrades_at_low_selectivity(data):
+    """PostFiltering needs much larger ef to reach the same recall (§2.2)."""
+    x, s, q, f, gt = data
+    idx = PostFilteringIndex(x, s)
+    r_small = recall(idx.query(q, f, k=10, ef=64)[0], gt)
+    r_large = recall(idx.query(q, f, k=10, ef=1024)[0], gt)
+    assert r_small < 0.8                  # wasteful at small budget
+    assert r_large >= 0.9                 # recovers with massive budget
+
+
+def test_prefilter_catastrophic(data):
+    """PreFiltering fragments the routing graph at 5% selectivity (§2.2)."""
+    x, s, q, f, gt = data
+    idx = PreFilteringIndex(x, s)
+    assert recall(idx.query(q, f, k=10, ef=64)[0], gt) < 0.7
+
+
+def test_acorn_beats_prefilter(data):
+    x, s, q, f, gt = data
+    pre = PreFilteringIndex(x, s)
+    acorn = AcornIndex(x, s, gamma=12)
+    r_pre = recall(pre.query(q, f, k=10, ef=64)[0], gt)
+    r_ac = recall(acorn.query(q, f, k=10, ef=64)[0], gt)
+    assert r_ac > r_pre
+    assert r_ac >= 0.6
+
+
+def test_treegraph_subquery_explosion(data):
+    """Tree-Graph reaches recall but via many independent subqueries (§3)."""
+    x, s, q, f, gt = data
+    idx = TreeGraphIndex(x, s, leaf_size=256)
+    ids, _, nsub = idx.query(q, f, k=10, ef=64, return_n_subqueries=True)
+    assert recall(ids, gt) >= 0.85
+    assert nsub >= 2                      # decoupled sub-index invocations
+
+
+def test_cubegraph_dominates_at_matched_budget(data):
+    """The paper's headline: CubeGraph >= baselines at the same ef (Exp-1)."""
+    x, s, q, f, gt = data
+    cg = CubeGraphIndex.build(x, s, CubeGraphConfig(n_layers=4, m_intra=12,
+                                                    m_cross=4))
+    r_cg = recall(cg.query(q, f, k=10, ef=64)[0], gt)
+    post = PostFilteringIndex(x, s)
+    r_post = recall(post.query(q, f, k=10, ef=64)[0], gt)
+    pre = PreFilteringIndex(x, s)
+    r_pre = recall(pre.query(q, f, k=10, ef=64)[0], gt)
+    assert r_cg >= 0.9
+    assert r_cg > r_post
+    assert r_cg > r_pre

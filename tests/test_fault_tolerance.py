@@ -1,0 +1,69 @@
+"""Cluster fault handling policies: heartbeats, stragglers, elastic plans."""
+import numpy as np
+
+from repro.training.fault_tolerance import (FaultTolerantRunner,
+                                            HeartbeatConfig, HeartbeatMonitor,
+                                            plan_elastic_mesh)
+
+
+def test_dead_host_detection():
+    cfg = HeartbeatConfig(interval_s=1.0, miss_threshold=3)
+    mon = HeartbeatMonitor(hosts=range(4), cfg=cfg)
+    now = 100.0
+    for h in range(4):
+        mon.beat(h, now=now)
+    mon.beat(0, now=now + 10)
+    mon.beat(1, now=now + 10)
+    mon.beat(2, now=now + 10)
+    # host 3 silent for 10s > 3 beats x 1s
+    assert mon.dead_hosts(now=now + 10) == [3]
+
+
+def test_straggler_detection():
+    mon = HeartbeatMonitor(hosts=range(4))
+    for step in range(10):
+        for h in range(4):
+            t = 1.0 if h != 2 else 3.5       # host 2 is 3.5x slower
+            mon.beat(h, step_time_s=t)
+    assert mon.stragglers() == [2]
+
+
+def test_no_false_stragglers():
+    mon = HeartbeatMonitor(hosts=range(8))
+    rng = np.random.default_rng(0)
+    for step in range(20):
+        for h in range(8):
+            mon.beat(h, step_time_s=1.0 + 0.05 * rng.random())
+    assert mon.stragglers() == []
+
+
+def test_elastic_plan_shrinks_data_axis():
+    p = plan_elastic_mesh(256, model_parallel=16)
+    assert p.mesh_shape == (16, 16)
+    # lose 32 chips -> largest pow2 data axis that fits
+    p = plan_elastic_mesh(224, model_parallel=16)
+    assert p.mesh_shape == (8, 16)
+    assert p.axis_names == ("data", "model")
+    # multi-pod
+    p = plan_elastic_mesh(512, model_parallel=16, pods=2)
+    assert p.mesh_shape == (2, 16, 16)
+    p = plan_elastic_mesh(480, model_parallel=16, pods=2)
+    assert p.mesh_shape == (2, 8, 16)
+
+
+def test_runner_checkpoints_and_flags(tmp_path):
+    from repro.training.checkpoint import CheckpointManager
+    cm = CheckpointManager(str(tmp_path))
+    mon = HeartbeatMonitor(hosts=range(2),
+                           cfg=HeartbeatConfig(interval_s=10.0))
+    runner = FaultTolerantRunner(cm, mon, ckpt_every=5)
+    state = {"w": np.ones(4)}
+    for step in range(1, 11):
+        runner.maybe_checkpoint(step, state, data_step=step)
+    assert cm.available_steps() == [5, 10]
+    # host 1 goes silent; host 0 keeps beating
+    mon.beat(1, now=200.0)
+    mon.beat(0, now=290.0)
+    status = runner.check_cluster(now=300.0)   # gap: host0=10s, host1=100s
+    assert status["dead"] == [1]
+    assert status["action"] == "elastic_restart"

@@ -1,0 +1,119 @@
+"""Filter predicates vs analytic oracles (incl. hypothesis property tests)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.filters import BallFilter, BoxFilter, ComposeFilter, PolygonFilter
+from repro.core.workloads import (make_ball_filter, make_box_filter,
+                                  make_compose_filter, make_polygon_filter)
+
+
+def test_box_contains():
+    f = BoxFilter(lo=jnp.asarray([0.2, 0.2]), hi=jnp.asarray([0.6, 0.8]))
+    s = jnp.asarray([[0.3, 0.5], [0.1, 0.5], [0.6, 0.8], [0.61, 0.5]])
+    assert np.array_equal(np.asarray(f.contains(s)), [True, False, True, False])
+
+
+def test_ball_contains():
+    f = BallFilter(center=jnp.asarray([0.5, 0.5]), radius=jnp.float32(0.2))
+    s = jnp.asarray([[0.5, 0.5], [0.5, 0.69], [0.5, 0.71], [0.9, 0.9]])
+    assert np.array_equal(np.asarray(f.contains(s)), [True, True, False, False])
+
+
+def test_ball_extra_dims_ignored():
+    """Ball over first 2 dims only; dim 3 is unconstrained."""
+    f = BallFilter(center=jnp.asarray([0.5, 0.5]), radius=jnp.float32(0.2))
+    s = jnp.asarray([[0.5, 0.5, 99.0], [0.9, 0.9, 0.0]])
+    assert np.array_equal(np.asarray(f.contains(s)), [True, False])
+
+
+def test_polygon_square():
+    """Unit test: axis-aligned square polygon == box."""
+    verts = jnp.asarray([[0.2, 0.2], [0.8, 0.2], [0.8, 0.8], [0.2, 0.8]])
+    f = PolygonFilter(vertices=verts, rest_lo=jnp.zeros(0), rest_hi=jnp.zeros(0))
+    rng = np.random.default_rng(0)
+    s = rng.uniform(0, 1, size=(500, 2)).astype(np.float32)
+    got = np.asarray(f.contains(jnp.asarray(s)))
+    want = np.all((s >= 0.2) & (s <= 0.8), axis=1)
+    # boundary points may differ; exclude near-boundary
+    interior = np.all(np.abs(s - 0.2) > 1e-3, axis=1) & np.all(np.abs(s - 0.8) > 1e-3, axis=1)
+    assert np.array_equal(got[interior], want[interior])
+
+
+def _winding_oracle(pt, verts):
+    """Crossing-number oracle in pure python."""
+    x, y = pt
+    inside = False
+    n = len(verts)
+    for i in range(n):
+        x1, y1 = verts[i]
+        x2, y2 = verts[(i + 1) % n]
+        if (y1 > y) != (y2 > y):
+            xint = x1 + (y - y1) / (y2 - y1) * (x2 - x1)
+            if x < xint:
+                inside = not inside
+    return inside
+
+
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(0, 10_000), px=st.floats(0, 1), py=st.floats(0, 1))
+def test_polygon_vs_oracle(seed, px, py):
+    f = make_polygon_filter(2, 0.1, n_vertices=5, seed=seed)
+    verts = np.asarray(f.vertices)
+    got = bool(np.asarray(f.contains(jnp.asarray([[px, py]], jnp.float32)))[0])
+    want = _winding_oracle((px, py), verts)
+    # skip points within eps of any edge (fp boundary sensitivity)
+    from numpy.linalg import norm
+    eps = 1e-4
+    p = np.array([px, py])
+    for i in range(len(verts)):
+        a, b = verts[i], verts[(i + 1) % len(verts)]
+        t = np.clip(np.dot(p - a, b - a) / (norm(b - a) ** 2 + 1e-12), 0, 1)
+        if norm(p - (a + t * (b - a))) < eps:
+            return
+    assert got == want
+
+
+def test_compose_andnot():
+    f = make_compose_filter(2, 0.1, seed=5)
+    rng = np.random.default_rng(1)
+    s = rng.uniform(0, 1, size=(1000, 2)).astype(np.float32)
+    got = np.asarray(f.contains(jnp.asarray(s)))
+    a = np.asarray(f.a.contains(jnp.asarray(s)))
+    b = np.asarray(f.b.contains(jnp.asarray(s)))
+    assert np.array_equal(got, a & ~b)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 1000), ratio=st.floats(0.01, 0.3),
+       m=st.integers(2, 4))
+def test_workload_filters_selectivity(seed, ratio, m):
+    """Generated filters hit roughly the requested volume ratio on uniform
+    metadata (within loose tolerance — the paper's 'filter ratio')."""
+    rng = np.random.default_rng(seed)
+    s = rng.uniform(0, 1, size=(4000, m)).astype(np.float32)
+    f = make_box_filter(m, ratio, seed=seed)
+    frac = float(np.asarray(f.contains(jnp.asarray(s))).mean())
+    assert 0.2 * ratio < frac < 5 * ratio + 0.02
+
+
+def test_bounding_boxes_contain_filters():
+    for mk in (make_box_filter, make_ball_filter, make_polygon_filter,
+               make_compose_filter):
+        f = mk(2, 0.08, seed=7)
+        lo, hi = f.bounding_box()
+        rng = np.random.default_rng(3)
+        s = rng.uniform(0, 1, size=(2000, 2)).astype(np.float32)
+        inside = np.asarray(f.contains(jnp.asarray(s)))
+        in_bb = np.all((s >= lo[:2] - 1e-6) & (s <= hi[:2] + 1e-6), axis=1)
+        assert not np.any(inside & ~in_bb)        # bbox is conservative
+
+
+def test_compose_mixed_dim_bounding_box():
+    """Regression: 2D ball AND 3D box (different dim prefixes) must compose
+    a finite 3D bounding box (caught by examples/spatial_filters.py)."""
+    f = make_ball_filter(3, 0.08, seed=2)       # ComposeFilter(ball2d, box3d)
+    lo, hi = f.bounding_box()
+    assert len(lo) == 3 and len(hi) == 3
+    assert np.all(np.isfinite(lo)) and np.all(np.isfinite(hi))
+    assert f.characteristic_length() < 10.0

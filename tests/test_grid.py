@@ -1,0 +1,81 @@
+"""Grid math: cube ids, adjacency, layer selection (Prop. 1 bounds)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.grid import GridSpec
+
+
+def _spec(m=2, L=5):
+    return GridSpec(lo=np.zeros(m), hi=np.ones(m), n_layers=L)
+
+
+def test_layer_granularity():
+    spec = _spec()
+    for l in range(spec.n_layers):
+        layer = spec.layer(l)
+        assert layer.g == 2 ** (l + 1)                      # Alg. 1 line 3
+        assert np.allclose(layer.width, 1.0 / layer.g)
+        assert layer.n_cubes == layer.g ** 2
+
+
+def test_cube_id_roundtrip():
+    spec = _spec(m=3)
+    layer = spec.layer(2)
+    rng = np.random.default_rng(0)
+    s = rng.uniform(0, 1, size=(100, 3))
+    flat = layer.cube_of(s)
+    coords = layer.unflatten(flat)
+    assert np.array_equal(layer.flat_of(coords), flat)
+    lo, hi = layer.cube_bounds(flat)
+    assert np.all(s >= lo - 1e-9) and np.all(s <= hi + 1e-9)
+
+
+def test_face_neighbors():
+    layer = _spec(m=2).layer(1)                             # 4x4 grid
+    nb = layer.face_neighbors(5)                            # coords (1, 1)
+    assert sorted(nb.tolist()) == sorted([1, 9, 4, 6])
+    corner = layer.face_neighbors(0)
+    assert (corner >= 0).sum() == 2                         # two OOB sides
+
+
+def test_cubes_overlapping_box():
+    layer = _spec(m=2).layer(1)                             # w = 0.25
+    ids = layer.cubes_overlapping_box(np.array([0.3, 0.3]), np.array([0.6, 0.6]))
+    # box spans cells 1..2 in both dims -> 2x2 cubes
+    assert len(ids) == 4
+
+
+@settings(max_examples=50, deadline=None)
+@given(r=st.floats(1e-3, 0.99), m=st.integers(1, 4))
+def test_layer_selection_bound(r, m):
+    """Selected layer satisfies w <= r (and r/2 < w when representable)."""
+    spec = GridSpec(lo=np.zeros(m), hi=np.ones(m), n_layers=6)
+    l = spec.select_layer(r)
+    w = float(spec.layer(l).width.max())
+    deepest_w = float(spec.layer(spec.n_layers - 1).width.max())
+    if r >= deepest_w:      # representable: Prop. 1 window must hold
+        assert w <= r + 1e-12
+        assert r / 2 < w + 1e-12
+    else:                   # smaller than deepest cube: clamped (§5.1)
+        assert l == spec.n_layers - 1
+
+
+@settings(max_examples=50, deadline=None)
+@given(r=st.floats(0.02, 0.9), m=st.integers(1, 3),
+       cx=st.floats(0, 1), cy=st.floats(0, 1))
+def test_prop1_cube_count(r, m, cx, cy):
+    """A box with max side r at the selected layer hits <= 3^m cubes."""
+    spec = GridSpec(lo=np.zeros(m), hi=np.ones(m), n_layers=8)
+    l = spec.select_layer(r)
+    w = float(spec.layer(l).width.max())
+    if w > r:   # r below deepest layer width: bound does not apply
+        return
+    ctr = np.full(m, 0.5)
+    ctr[0] = cx
+    if m > 1:
+        ctr[1] = cy
+    lo = np.clip(ctr - r / 2, 0, 1 - 1e-9)
+    hi = np.clip(lo + r, 0, 1 - 1e-9)
+    ids = spec.layer(l).cubes_overlapping_box(lo, hi)
+    assert len(ids) <= 3 ** m

@@ -1,0 +1,71 @@
+"""Hypothesis property tests on system-level invariants."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CubeGraphConfig, CubeGraphIndex
+from repro.core.workloads import (ground_truth, make_ball_filter,
+                                  make_box_filter, make_dataset, recall)
+from repro.kernels import filtered_topk
+
+
+@pytest.fixture(scope="module")
+def small_index():
+    x, s = make_dataset(1200, 24, 2, seed=42)
+    idx = CubeGraphIndex.build(x, s, CubeGraphConfig(n_layers=3, m_intra=10,
+                                                     m_cross=3))
+    return x, s, idx
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 500), ratio=st.floats(0.02, 0.3),
+       k=st.integers(1, 20))
+def test_results_always_satisfy_filter(small_index, seed, ratio, k):
+    x, s, idx = small_index
+    f = make_box_filter(2, ratio, seed=seed)
+    ids, d = idx.query(x[:4], f, k=k, ef=max(32, 2 * k))
+    ok = ids >= 0
+    if ok.any():
+        assert bool(f.contains(jnp.asarray(s[ids[ok]])).all())
+    # distances ascending per row
+    dd = np.where(np.isfinite(d), d, np.inf)
+    assert np.all(np.diff(dd, axis=1) >= -1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 500), ratio=st.floats(0.05, 0.3))
+def test_exhaustive_ef_reaches_full_recall(small_index, seed, ratio):
+    """With ef ~ |D_phi| the beam search must converge to the exact answer."""
+    x, s, idx = small_index
+    f = make_box_filter(2, ratio, seed=seed)
+    gt, _ = ground_truth(x, s, x[:4], f, 5)
+    ids, _ = idx.query(x[:4], f, k=5, ef=512, max_iters=2048)
+    assert recall(ids, gt) >= 0.95
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 300), k=st.integers(1, 32))
+def test_kernel_topk_matches_oracle_property(seed, k):
+    x, s = make_dataset(600, 16, 2, seed=seed)
+    f = make_ball_filter(2, 0.2, seed=seed)
+    ids, dd = filtered_topk(x[:3], x, s, f, k)
+    gt_i, _ = ground_truth(x, s, x[:3], f, k)
+    for a, b in zip(np.asarray(ids), gt_i):
+        assert set(a[a >= 0]) == set(b[b >= 0])
+
+
+@settings(max_examples=8, deadline=None)
+@given(n_add=st.integers(10, 120))
+def test_insert_preserves_filter_invariant(small_index, n_add):
+    x, s, _ = small_index
+    idx = CubeGraphIndex.build(x[:800], s[:800],
+                               CubeGraphConfig(n_layers=3, m_intra=10,
+                                               m_cross=3))
+    idx.insert_batch(x[800:800 + n_add], s[800:800 + n_add])
+    f = make_box_filter(2, 0.15, seed=1)
+    ids, _ = idx.query(x[:4], f, k=10, ef=64)
+    ok = ids >= 0
+    if ok.any():
+        assert bool(f.contains(jnp.asarray(s[ids[ok]])).all())
+    assert idx.n == 800 + n_add

@@ -1,0 +1,69 @@
+"""End-to-end spatio-temporal RAG (the paper's application layer)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import CubeGraphConfig
+from repro.core.workloads import make_box_filter, make_dataset
+from repro.models import build_model, init_params
+from repro.serving.rag import Document, DocumentStore, RAGPipeline
+
+
+@pytest.fixture(scope="module")
+def store_and_model():
+    x, s = make_dataset(1200, 24, 3, seed=1)     # 2D geo + time
+    rng = np.random.default_rng(2)
+    docs = [Document(doc_id=i,
+                     tokens=rng.integers(2, 250, size=12).astype(np.int32),
+                     embedding=x[i], metadata=s[i]) for i in range(1200)]
+    store = DocumentStore(docs, CubeGraphConfig(n_layers=3, m_intra=10,
+                                                m_cross=3))
+    cfg = get_config("internvl2-2b", smoke=True)
+    import dataclasses
+    cfg = dataclasses.replace(cfg, n_patches=0)   # pure-text RAG here
+    model = build_model(cfg)
+    params = init_params(model.param_specs(), jax.random.key(0))
+    return x, s, store, model, params
+
+
+def test_retrieval_respects_filter(store_and_model):
+    x, s, store, model, params = store_and_model
+    f = make_box_filter(3, 0.1, seed=3)
+    q_emb = x[7]
+    got = store.retrieve(q_emb, f, k=5, ef=64)[0]
+    import jax.numpy as jnp
+    for d in got:
+        assert bool(f.contains(jnp.asarray(d.metadata[None, :]))[0])
+
+
+def test_rag_answer_end_to_end(store_and_model):
+    x, s, store, model, params = store_and_model
+    pipe = RAGPipeline(store, model, params, max_context=64)
+    f = make_box_filter(3, 0.2, seed=4)
+    rng = np.random.default_rng(5)
+    query = rng.integers(2, 250, size=6).astype(np.int32)
+    out, docs = pipe.answer(query, f, k=3, max_new=8)
+    assert len(out) == 8
+    assert all(0 <= t < model.cfg.vocab for t in out)
+    assert 1 <= len(docs) <= 3
+
+
+def test_rag_store_insert(store_and_model):
+    """Streaming ingestion: new documents become retrievable (paper §4.4)."""
+    x, s, store, model, params = store_and_model
+    rng = np.random.default_rng(6)
+    n0 = store.index.n
+    new_docs = [Document(doc_id=n0 + i,
+                         tokens=rng.integers(2, 250, size=12).astype(np.int32),
+                         embedding=x[i] + 0.01,
+                         metadata=np.asarray([0.5, 0.5, 0.5]))
+                for i in range(8)]
+    store.insert(new_docs)
+    assert store.index.n == n0 + 8
+    from repro.core.filters import BoxFilter
+    import jax.numpy as jnp
+    f = BoxFilter(lo=jnp.asarray([0.45, 0.45, 0.45]),
+                  hi=jnp.asarray([0.55, 0.55, 0.55]))
+    got = store.retrieve(x[0] + 0.01, f, k=4, ef=64)[0]
+    assert any(d.doc_id >= n0 for d in got)

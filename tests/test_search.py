@@ -1,0 +1,122 @@
+"""CubeGraph index behaviour: recall targets, invariants, both search modes."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CubeGraphConfig, CubeGraphIndex
+from repro.core.workloads import (ground_truth, make_ball_filter,
+                                  make_box_filter, make_compose_filter,
+                                  make_dataset, make_polygon_filter, recall)
+
+
+@pytest.fixture(scope="module")
+def built():
+    x, s = make_dataset(3000, 32, 2, seed=1)
+    idx = CubeGraphIndex.build(x, s, CubeGraphConfig(n_layers=4, m_intra=12,
+                                                     m_cross=4))
+    rng = np.random.default_rng(2)
+    q = x[rng.integers(0, 3000, 24)] + 0.05 * rng.normal(size=(24, 32)).astype(np.float32)
+    return x, s, idx, q
+
+
+def test_build_structure(built):
+    x, s, idx, q = built
+    assert idx.n_built_layers >= 2
+    for lg in idx.layers:
+        nb = np.asarray(lg.nbrs)
+        # intra edges stay inside the cube
+        src_cube = lg.cube_of[:, None].repeat(nb.shape[1], 1)
+        ok = nb >= 0
+        assert np.all(lg.cube_of[nb[ok]] == src_cube[ok])
+        # cross edges leave the cube
+        xn = np.asarray(lg.xnbrs)
+        okx = xn >= 0
+        if okx.any():
+            src = lg.cube_of[:, None].repeat(xn.shape[1], 1)
+            assert np.all(lg.cube_of[xn[okx]] != src[okx])
+
+
+@pytest.mark.parametrize("ratio", [0.02, 0.05, 0.15])
+def test_predetermined_recall(built, ratio):
+    x, s, idx, q = built
+    f = make_box_filter(2, ratio, seed=int(ratio * 100))
+    gt, _ = ground_truth(x, s, q, f, 10)
+    ids, d = idx.query(q, f, k=10, ef=96, mode="predetermined")
+    assert recall(ids, gt) >= 0.9
+
+
+@pytest.mark.parametrize("mk", [make_ball_filter, make_polygon_filter,
+                                make_compose_filter])
+def test_onthefly_recall(built, mk):
+    x, s, idx, q = built
+    f = mk(2, 0.08, seed=9)
+    gt, _ = ground_truth(x, s, q, f, 10)
+    ids, d = idx.query(q, f, k=10, ef=96, mode="onthefly")
+    assert recall(ids, gt) >= 0.85
+
+
+def test_results_satisfy_filter(built):
+    x, s, idx, q = built
+    f = make_ball_filter(2, 0.1, seed=3)
+    ids, d = idx.query(q, f, k=10, ef=64)
+    ok = ids >= 0
+    flat = ids[ok]
+    assert np.all(np.asarray(f.contains(jnp.asarray(s[flat]))))
+
+
+def test_results_sorted_and_consistent(built):
+    x, s, idx, q = built
+    f = make_box_filter(2, 0.1, seed=4)
+    ids, d = idx.query(q, f, k=10, ef=64)
+    finite = np.where(np.isfinite(d), d, 1e30)
+    assert np.all(np.diff(finite, axis=1) >= -1e-5)
+    # reported distances match recomputed distances
+    for row_i, row_d in zip(ids, d):
+        for i, dv in zip(row_i, row_d):
+            if i >= 0:
+                true = float(((x[i] - x[0]) ** 2).sum())  # placeholder sanity
+    # recompute properly for first query
+    for i, dv in zip(ids[0], d[0]):
+        if i >= 0:
+            true = float(((x[i].astype(np.float64) - q[0].astype(np.float64)) ** 2).sum())
+            assert abs(true - dv) < 1e-2 * max(1.0, true)
+
+
+def test_recall_improves_with_ef(built):
+    x, s, idx, q = built
+    f = make_box_filter(2, 0.03, seed=5)
+    gt, _ = ground_truth(x, s, q, f, 10)
+    r_small = recall(idx.query(q, f, k=10, ef=16)[0], gt)
+    r_large = recall(idx.query(q, f, k=10, ef=128)[0], gt)
+    assert r_large >= r_small - 0.02
+    assert r_large >= 0.9
+
+
+def test_layer_override(built):
+    """Explicit layer selection still returns filtered results (Exp-6 knob)."""
+    x, s, idx, q = built
+    f = make_box_filter(2, 0.05, seed=6)
+    gt, _ = ground_truth(x, s, q, f, 10)
+    for layer in range(idx.n_built_layers):
+        ids, _ = idx.query(q, f, k=10, ef=96, layer=layer)
+        assert recall(ids, gt) >= 0.6
+
+
+def test_3d_metadata():
+    x, s = make_dataset(2000, 24, 3, seed=7)
+    idx = CubeGraphIndex.build(x, s, CubeGraphConfig(n_layers=3, m_intra=10,
+                                                     m_cross=3))
+    q = x[:16] + 0.02
+    f = make_box_filter(3, 0.1, seed=8)
+    gt, _ = ground_truth(x, s, q, f, 10)
+    ids, _ = idx.query(q, f, k=10, ef=96)
+    assert recall(ids, gt) >= 0.85
+
+
+def test_empty_filter_region():
+    x, s = make_dataset(500, 16, 2, seed=9)
+    idx = CubeGraphIndex.build(x, s, CubeGraphConfig(n_layers=3))
+    from repro.core.filters import BoxFilter
+    f = BoxFilter(lo=jnp.asarray([2.0, 2.0]), hi=jnp.asarray([3.0, 3.0]))
+    ids, d = idx.query(x[:4], f, k=5, ef=32)
+    assert np.all(ids == -1)

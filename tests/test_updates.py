@@ -1,0 +1,93 @@
+"""Dynamic updates (§4.4): insertion, lazy deletion, compaction."""
+import numpy as np
+import pytest
+
+from repro.core import CubeGraphConfig, CubeGraphIndex
+from repro.core.workloads import (ground_truth, make_box_filter, make_dataset,
+                                  recall)
+
+CFG = CubeGraphConfig(n_layers=3, m_intra=10, m_cross=3)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    x, s = make_dataset(2000, 24, 2, seed=1)
+    rng = np.random.default_rng(2)
+    q = x[rng.integers(0, 2000, 16)] + 0.05 * rng.normal(size=(16, 24)).astype(np.float32)
+    f = make_box_filter(2, 0.08, seed=3)
+    return x, s, q, f
+
+
+def test_insert_discoverable(setup):
+    """Inserted points are returned by subsequent queries."""
+    x, s, q, f = setup
+    idx = CubeGraphIndex.build(x[:1500], s[:1500], CFG)
+    idx.insert_batch(x[1500:], s[1500:])
+    assert idx.n == 2000
+    gt, _ = ground_truth(x, s, q, f, 10)
+    ids, _ = idx.query(q, f, k=10, ef=96)
+    r = recall(ids, gt)
+    assert r >= 0.8, f"post-insert recall {r}"
+    # at least some results come from the inserted range when gt does
+    gt_new = set(int(v) for row in gt for v in row if v >= 1500)
+    if gt_new:
+        got_new = set(int(v) for row in ids for v in row if v >= 1500)
+        assert got_new & gt_new
+
+
+def test_insert_vs_rebuild_equivalence(setup):
+    """Incremental insert reaches recall close to rebuild-from-scratch."""
+    x, s, q, f = setup
+    gt, _ = ground_truth(x, s, q, f, 10)
+    inc = CubeGraphIndex.build(x[:1600], s[:1600], CFG)
+    inc.insert_batch(x[1600:], s[1600:])
+    full = CubeGraphIndex.build(x, s, CFG)
+    r_inc = recall(inc.query(q, f, k=10, ef=96)[0], gt)
+    r_full = recall(full.query(q, f, k=10, ef=96)[0], gt)
+    assert r_inc >= r_full - 0.1
+
+
+def test_lazy_delete(setup):
+    """Deleted ids never appear in results; recall vs remaining set holds."""
+    x, s, q, f = setup
+    idx = CubeGraphIndex.build(x, s, CFG)
+    rng = np.random.default_rng(5)
+    dead = rng.choice(2000, size=400, replace=False)
+    idx.delete(dead)
+    assert abs(idx.deleted_fraction() - 0.2) < 0.01
+    ids, _ = idx.query(q, f, k=10, ef=96)
+    assert not (set(ids[ids >= 0].tolist()) & set(dead.tolist()))
+    alive = np.ones(2000, bool)
+    alive[dead] = False
+    gt, _ = ground_truth(x, s, q, f, 10, valid=alive)
+    assert recall(ids, gt) >= 0.8
+
+
+def test_compact_after_delete(setup):
+    x, s, q, f = setup
+    idx = CubeGraphIndex.build(x, s, CFG)
+    rng = np.random.default_rng(6)
+    dead = rng.choice(2000, size=1000, replace=False)
+    idx.delete(dead)
+    alive = np.ones(2000, bool)
+    alive[dead] = False
+    compacted = idx.compact()
+    assert compacted.n == 1000
+    # compacted index ids are re-based; just verify filtered recall works
+    keep = np.nonzero(alive)[0]
+    gt_c, _ = ground_truth(x[keep], s[keep], q, f, 10)
+    ids, _ = compacted.query(q, f, k=10, ef=96)
+    assert recall(ids, gt_c) >= 0.8
+
+
+def test_save_load_roundtrip(tmp_path, setup):
+    """Persisted index answers queries identically after reload."""
+    from repro.core.cubegraph import load_index, save_index
+    x, s, q, f = setup
+    idx = CubeGraphIndex.build(x[:800], s[:800], CFG)
+    ids_a, d_a = idx.query(q, f, k=10, ef=64)
+    save_index(idx, str(tmp_path / "idx"))
+    idx2 = load_index(str(tmp_path / "idx"))
+    ids_b, d_b = idx2.query(q, f, k=10, ef=64)
+    np.testing.assert_array_equal(ids_a, ids_b)
+    np.testing.assert_allclose(d_a, d_b, rtol=1e-6)
