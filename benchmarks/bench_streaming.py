@@ -1,0 +1,106 @@
+"""Exp-9: streaming temporal index — ingest throughput and query behavior
+under a live write stream (segment lifecycle: seal -> delete -> compact).
+
+Reported:
+  * ingest throughput (points/s) including seal-triggered segment builds
+  * time-windowed query latency + recall at checkpoints DURING ingest
+  * query latency before vs after compaction (delete-heavy steady state)
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (BoxFilter, ComposeFilter, CubeGraphConfig,
+                        IntervalFilter)
+from repro.core.workloads import ground_truth, make_dataset, recall
+from repro.streaming import SegmentManager, StreamConfig
+
+from .common import BENCH_D, BENCH_N, BENCH_Q, csv_row, record, timed_queries
+
+CFG = CubeGraphConfig(n_layers=3, m_intra=12, m_cross=4)
+
+
+def _window(t_lo, t_hi):
+    return ComposeFilter(
+        BoxFilter(lo=np.zeros(3, np.float32), hi=np.ones(3, np.float32)),
+        IntervalFilter(dim=2, lo=np.float32(t_lo), hi=np.float32(t_hi)),
+        "and")
+
+
+def run():
+    n = max(BENCH_N, 4000)
+    x, s = make_dataset(n, BENCH_D, 3, seed=21)
+    s[:, 2] = np.arange(n) / n                      # event time = arrival
+    rng = np.random.default_rng(22)
+    q = x[rng.integers(0, n, BENCH_Q)] \
+        + 0.05 * rng.normal(size=(BENCH_Q, BENCH_D)).astype(np.float32)
+
+    mgr = SegmentManager(BENCH_D, 3, StreamConfig(
+        time_dim=2, seal_max_points=max(n // 8, 512),
+        compact_max_segments=4, index_cfg=CFG))
+
+    out = {"checkpoints": []}
+    chunk = max(n // 20, 256)
+    checkpoints = {n // 4, n // 2, 3 * n // 4, n}
+    t_ingest = 0.0
+    ingested = 0
+    for lo in range(0, n, chunk):
+        t0 = time.perf_counter()
+        mgr.ingest(x[lo:lo + chunk], s[lo:lo + chunk])
+        t_ingest += time.perf_counter() - t0
+        ingested = min(lo + chunk, n)
+        if any(ingested >= c and ingested - chunk < c for c in checkpoints):
+            # query a trailing window while the stream is live
+            t_hi = ingested / n
+            f = _window(max(t_hi - 0.3, 0.0), t_hi)
+            dt, ids = timed_queries(lambda: mgr.query(q, f, k=10, ef=96)[0])
+            gt, _ = ground_truth(x[:ingested], s[:ingested], q, f, 10,
+                                 valid=mgr.alive[:ingested])
+            cp = {"ingested": ingested,
+                  "n_segments": len(mgr.segments),
+                  "delta_live": mgr.delta.n_live,
+                  "us_per_query": round(dt / BENCH_Q * 1e6, 1),
+                  "recall": round(recall(ids, gt), 4)}
+            out["checkpoints"].append(cp)
+            csv_row(f"exp9/during_ingest_{ingested}", dt * 1e6,
+                    f"recall={cp['recall']};segs={cp['n_segments']}")
+    out["ingest_points_per_s"] = round(n / max(t_ingest, 1e-9), 1)
+    csv_row("exp9/ingest_throughput", t_ingest * 1e6 / n,
+            f"points_per_s={out['ingest_points_per_s']}")
+
+    # -- steady state: heavy deletions, then compaction ---------------------
+    dead = rng.choice(n // 2, size=n // 4, replace=False)
+    mgr.delete(dead)
+    f = _window(0.0, 1.0)
+    dt_pre, ids_pre = timed_queries(lambda: mgr.query(q, f, k=10, ef=96)[0])
+    gt, _ = ground_truth(x, s, q, f, 10, valid=mgr.alive)
+    r_pre = recall(ids_pre, gt)
+    n_segs_pre = len(mgr.segments)
+
+    t0 = time.perf_counter()
+    ops = mgr.compact()
+    t_compact = time.perf_counter() - t0
+    dt_post, ids_post = timed_queries(lambda: mgr.query(q, f, k=10, ef=96)[0])
+    r_post = recall(ids_post, gt)
+
+    out["before_compaction"] = {"us_per_query": round(dt_pre / BENCH_Q * 1e6, 1),
+                                "recall": round(r_pre, 4),
+                                "n_segments": n_segs_pre}
+    out["compaction"] = {"ops": ops, "seconds": round(t_compact, 2),
+                         "n_segments_after": len(mgr.segments)}
+    out["after_compaction"] = {"us_per_query": round(dt_post / BENCH_Q * 1e6, 1),
+                               "recall": round(r_post, 4)}
+    csv_row("exp9/query_before_compaction", dt_pre * 1e6,
+            f"recall={r_pre:.3f}")
+    csv_row("exp9/compaction", t_compact * 1e6, f"ops={ops}")
+    csv_row("exp9/query_after_compaction", dt_post * 1e6,
+            f"recall={r_post:.3f};"
+            f"speedup={dt_pre / max(dt_post, 1e-9):.2f}x")
+    record("exp9_streaming", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

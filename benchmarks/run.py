@@ -11,7 +11,8 @@ def main() -> None:
     from . import (bench_aspect_ratio, bench_distributions,
                    bench_filter_shapes, bench_index_cost, bench_kernels,
                    bench_merge_count, bench_merge_strategy, bench_multidim,
-                   bench_scalability, bench_search, bench_updates)
+                   bench_scalability, bench_search, bench_streaming,
+                   bench_updates)
     from .common import flush_results
 
     sections = [
@@ -23,6 +24,7 @@ def main() -> None:
         ("exp6_merge_count", bench_merge_count),
         ("exp7_scalability", bench_scalability),
         ("exp8_distributions", bench_distributions),
+        ("exp9_streaming", bench_streaming),
         ("a5_aspect_ratio", bench_aspect_ratio),
         ("a6_merge_strategy", bench_merge_strategy),
         ("kernels", bench_kernels),

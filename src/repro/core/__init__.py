@@ -5,12 +5,14 @@ arbitrary spatio-temporal filters (boxes, balls, polygons, compositions),
 plus the paper's baselines (PostFiltering / PreFiltering / ACORN / TreeGraph).
 """
 from .cubegraph import CubeGraphConfig, CubeGraphIndex
-from .filters import BallFilter, BoxFilter, ComposeFilter, Filter, PolygonFilter
+from .filters import (BallFilter, BoxFilter, ComposeFilter, Filter,
+                      IntervalFilter, PolygonFilter)
 from .grid import GridSpec, Layer
 from .search import SearchParams, beam_search
 
 __all__ = [
     "CubeGraphConfig", "CubeGraphIndex",
-    "BallFilter", "BoxFilter", "ComposeFilter", "Filter", "PolygonFilter",
+    "BallFilter", "BoxFilter", "ComposeFilter", "Filter", "IntervalFilter",
+    "PolygonFilter",
     "GridSpec", "Layer", "SearchParams", "beam_search",
 ]

@@ -119,9 +119,24 @@ class CubeGraphIndex:
         lsel = self.grid.select_layer(filt.characteristic_length())
         return int(np.clip(lsel, 0, self.n_built_layers - 1))
 
+    def _bounds(self, filt: Filter):
+        """Filter bounding box conformed to the grid: padded to m dims when
+        the filter constrains only a prefix (BallFilter) or a single dim
+        (IntervalFilter), then clipped to the global box."""
+        blo, bhi = filt.bounding_box()
+        blo = np.asarray(blo, np.float64)
+        bhi = np.asarray(bhi, np.float64)
+        pad = self.grid.m - len(blo)
+        if pad > 0:
+            blo = np.concatenate([blo, np.full(pad, -np.inf)])
+            bhi = np.concatenate([bhi, np.full(pad, np.inf)])
+        blo = np.clip(blo[: self.grid.m], self.grid.lo, self.grid.hi)
+        bhi = np.clip(bhi[: self.grid.m], self.grid.lo, self.grid.hi)
+        return blo, bhi
+
     def _plan_predetermined(self, filt: Filter, level: int):
         lg = self.layers[level]
-        blo, bhi = filt.bounding_box()
+        blo, bhi = self._bounds(filt)
         cube_ids = lg.layer.cubes_overlapping_box(blo, bhi)
         rows = lg.cubes.row_of(cube_ids)
         cube_ids = cube_ids[rows >= 0]                     # drop empty cubes
@@ -136,7 +151,7 @@ class CubeGraphIndex:
 
     def _plan_onthefly(self, filt: Filter, level: int):
         lg = self.layers[level]
-        blo, bhi = filt.bounding_box()
+        blo, bhi = self._bounds(filt)
         center = (np.asarray(blo) + np.asarray(bhi)) / 2.0
         c0 = int(lg.layer.cube_of(center[None])[0])
         if lg.cubes.row_of(np.asarray([c0]))[0] < 0:

@@ -14,13 +14,18 @@ circle").
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["BoxFilter", "BallFilter", "PolygonFilter", "ComposeFilter", "Filter"]
+__all__ = ["BoxFilter", "BallFilter", "IntervalFilter", "PolygonFilter",
+           "ComposeFilter", "Filter"]
+
+# Sentinel for "unconstrained" bounding-box edges (planning only: the grid
+# clips boxes to the dataset bounds, so any value >> data range works).
+UNBOUNDED = 1e18
 
 
 class Filter:
@@ -60,6 +65,40 @@ class BoxFilter(Filter):
 
     def bounding_box(self):
         return np.asarray(self.lo), np.asarray(self.hi)
+
+
+@dataclasses.dataclass(frozen=True)
+class IntervalFilter(Filter):
+    """Interval on a single metadata dim (typically time), either end open.
+
+    A temporal half-open window ``[t0, ∞)`` is expressed directly as
+    ``IntervalFilter(dim=time_dim, lo=t0)`` — no fake ``+inf`` box edge needs
+    to be synthesized by the caller.  ``dim`` is static (part of the pytree
+    structure); the bounds are traced arrays.
+    """
+
+    dim: int
+    lo: Optional[jnp.ndarray] = None    # scalar, None = unbounded below
+    hi: Optional[jnp.ndarray] = None    # scalar, None = unbounded above
+
+    def contains(self, s):
+        s = jnp.asarray(s)
+        v = s[..., self.dim]
+        ok = jnp.ones(v.shape, bool)
+        if self.lo is not None:
+            ok = ok & (v >= self.lo)
+        if self.hi is not None:
+            ok = ok & (v <= self.hi)
+        return ok
+
+    def bounding_box(self):
+        lo = np.full(self.dim + 1, -UNBOUNDED)
+        hi = np.full(self.dim + 1, UNBOUNDED)
+        if self.lo is not None:
+            lo[self.dim] = float(np.asarray(self.lo))
+        if self.hi is not None:
+            hi[self.dim] = float(np.asarray(self.hi))
+        return lo, hi
 
 
 @dataclasses.dataclass(frozen=True)
@@ -166,6 +205,11 @@ class ComposeFilter(Filter):
 
 
 _register(BoxFilter, ("lo", "hi"))
+jax.tree_util.register_pytree_node(
+    IntervalFilter,
+    lambda f: ((f.lo, f.hi), f.dim),
+    lambda dim, ch: IntervalFilter(dim, ch[0], ch[1]),
+)
 _register(BallFilter, ("center", "radius"))
 _register(PolygonFilter, ("vertices", "rest_lo", "rest_hi"))
 jax.tree_util.register_pytree_node(

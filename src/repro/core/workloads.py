@@ -140,11 +140,16 @@ def make_compose_filter(m: int, ratio: float, seed: int = 0) -> ComposeFilter:
 
 
 def ground_truth(x: np.ndarray, s: np.ndarray, queries: np.ndarray,
-                 filt: Filter, k: int, valid: Optional[np.ndarray] = None,
+                 filt: Optional[Filter], k: int,
+                 valid: Optional[np.ndarray] = None,
                  metric: str = "l2") -> Tuple[np.ndarray, np.ndarray]:
-    """Exact filtered top-k by brute force (numpy oracle)."""
+    """Exact filtered top-k by brute force (numpy oracle).  ``filt=None``
+    means unfiltered."""
     import jax.numpy as jnp
-    mask = np.asarray(filt.contains(jnp.asarray(s)))
+    if filt is None:
+        mask = np.ones(len(s), bool)
+    else:
+        mask = np.asarray(filt.contains(jnp.asarray(s)))
     if valid is not None:
         mask = mask & valid
     idx = np.nonzero(mask)[0]

@@ -28,7 +28,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 __all__ = ["filtered_topk_kernel_call", "FILTER_KINDS"]
 
-FILTER_KINDS = ("none", "box", "ball", "box_not_ball")
+FILTER_KINDS = ("none", "box", "ball", "box_not_ball", "box_ball")
 _NEG = -1e30
 _POS = 1e30
 
@@ -49,6 +49,8 @@ def _filter_mask(meta, params, kind):
         return in_box
     if kind == "ball":
         return in_ball
+    if kind == "box_ball":
+        return in_box & in_ball
     return in_box & ~in_ball                       # box_not_ball
 
 

@@ -13,7 +13,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.filters import BallFilter, BoxFilter, ComposeFilter, Filter
+from ..core.filters import (BallFilter, BoxFilter, ComposeFilter, Filter,
+                            IntervalFilter)
 from . import ref
 from .distance import pairwise_dist_kernel_call
 from .filtered_topk import filtered_topk_kernel_call
@@ -55,10 +56,24 @@ def pairwise_dist(q, x, metric: str = "l2", use_kernel: bool = True,
     return out[:bq, :n]
 
 
+def _flatten_and(filt: Filter):
+    """Flatten nested 'and' compositions into a list of leaf filters."""
+    if isinstance(filt, ComposeFilter) and filt.op == "and":
+        return _flatten_and(filt.a) + _flatten_and(filt.b)
+    return [filt]
+
+
 def encode_filter(filt: Optional[Filter], m: int,
                   mpad: int = 128) -> Optional[Tuple[str, np.ndarray]]:
     """Filter object -> (kind, packed [4, mpad] params) or None if the filter
-    has no kernel encoding (the caller falls back to the jnp path)."""
+    has no kernel encoding (the caller falls back to the jnp path).
+
+    Box rows default to (-1e30, +1e30) per dim, so half-open intervals
+    (``IntervalFilter`` with an open end) encode without a synthetic bound:
+    metadata padding rows carry +2e30 and still fail every box test.
+    Conjunctions of boxes/intervals fold into one box; one ball plus any
+    boxes/intervals encodes as the fused ``box_ball`` kind.
+    """
     params = np.zeros((4, mpad), np.float32)
     params[0, :] = -_POS
     params[1, :] = _POS
@@ -69,33 +84,64 @@ def encode_filter(filt: Optional[Filter], m: int,
         params[0, :m] = np.maximum(params[0, :m], np.asarray(lo, np.float32))
         params[1, :m] = np.minimum(params[1, :m], np.asarray(hi, np.float32))
 
+    def put_interval(f: IntervalFilter) -> bool:
+        if f.dim >= m:
+            return False
+        if f.lo is not None:
+            params[0, f.dim] = max(params[0, f.dim],
+                                   float(np.asarray(f.lo)))
+        if f.hi is not None:
+            params[1, f.dim] = min(params[1, f.dim],
+                                   float(np.asarray(f.hi)))
+        return True
+
+    def put_ball(f: BallFilter):
+        c = np.asarray(f.center, np.float32)
+        params[2, : len(c)] = c
+        params[3, 0] = float(np.asarray(f.radius)) ** 2
+        params[3, 1] = len(c)
+
     if filt is None:
         return "none", params
     if isinstance(filt, BoxFilter):
         put_box(filt.lo, filt.hi)
         return "box", params
+    if isinstance(filt, IntervalFilter):
+        return ("box", params) if put_interval(filt) else None
     if isinstance(filt, BallFilter):
-        c = np.asarray(filt.center, np.float32)
-        params[2, : len(c)] = c
-        params[3, 0] = float(np.asarray(filt.radius)) ** 2
-        params[3, 1] = len(c)
+        put_ball(filt)
         return "ball", params
     if isinstance(filt, ComposeFilter):
-        a, b, op = filt.a, filt.b, filt.op
-        if (op == "andnot" and isinstance(a, BoxFilter)
-                and isinstance(b, BallFilter)):
-            put_box(a.lo, a.hi)
-            c = np.asarray(b.center, np.float32)
-            params[2, : len(c)] = c
-            params[3, 0] = float(np.asarray(b.radius)) ** 2
-            params[3, 1] = len(c)
-            return "box_not_ball", params
-        if op == "and" and isinstance(a, BallFilter) and isinstance(b, BoxFilter):
-            # ball ∧ box: box goes to rows 0/1, ball to rows 2/3 with kind
-            # needing both => encode as box_not_ball with inverted ball? No —
-            # use a dedicated 'ball' + box composite: box rows apply in every
-            # kind except 'none'/'ball'; keep jnp fallback for this one.
+        if filt.op == "andnot":
+            # (boxes/intervals) \ ball
+            b = filt.b
+            parts = _flatten_and(filt.a)
+            if isinstance(b, BallFilter) and all(
+                    isinstance(p, (BoxFilter, IntervalFilter)) for p in parts):
+                for p in parts:
+                    if isinstance(p, BoxFilter):
+                        put_box(p.lo, p.hi)
+                    elif not put_interval(p):
+                        return None
+                put_ball(b)
+                return "box_not_ball", params
             return None
+        if filt.op == "and":
+            parts = _flatten_and(filt)
+            balls = [p for p in parts if isinstance(p, BallFilter)]
+            rest = [p for p in parts if not isinstance(p, BallFilter)]
+            if len(balls) > 1 or not all(
+                    isinstance(p, (BoxFilter, IntervalFilter)) for p in rest):
+                return None
+            for p in rest:
+                if isinstance(p, BoxFilter):
+                    put_box(p.lo, p.hi)
+                elif not put_interval(p):
+                    return None
+            if not balls:
+                return "box", params
+            put_ball(balls[0])
+            return "box_ball", params
     return None
 
 

@@ -33,7 +33,7 @@ def filter_mask_ref(s: jnp.ndarray, kind: str, params: jnp.ndarray) -> jnp.ndarr
     ``params`` layout (rows of a [4, m] fp32 array):
       row 0: box lo       row 1: box hi
       row 2: ball center  row 3: [radius^2, ball_ndim, 0, ...]
-    kinds: 'none' | 'box' | 'ball' | 'box_not_ball'
+    kinds: 'none' | 'box' | 'ball' | 'box_not_ball' | 'box_ball'
     """
     s = jnp.asarray(s, jnp.float32)
     m = s.shape[-1]
@@ -50,6 +50,8 @@ def filter_mask_ref(s: jnp.ndarray, kind: str, params: jnp.ndarray) -> jnp.ndarr
         return in_ball
     if kind == "box_not_ball":
         return in_box & ~in_ball
+    if kind == "box_ball":
+        return in_box & in_ball
     raise ValueError(kind)
 
 

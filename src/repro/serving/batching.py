@@ -1,9 +1,13 @@
-"""Continuous batching scheduler (vLLM-style slot model, host-side).
+"""Serving-side batchers (host-side schedulers).
 
-Fixed ``n_slots`` decode lanes over one shared KV cache; requests are
-admitted into free slots as they arrive, prefilled individually, then decoded
-together in lockstep.  Finished slots (EOS or budget) free immediately —
-decode throughput is not gated on the slowest request in a batch.
+* ``ContinuousBatcher`` — vLLM-style slot model for decode: fixed
+  ``n_slots`` lanes over one shared KV cache; requests are admitted into
+  free slots as they arrive, prefilled individually, then decoded together
+  in lockstep.  Finished slots (EOS or budget) free immediately.
+* ``RetrievalBatcher`` — groups queued retrieval requests that share a
+  filter and routes each group as ONE batched query through the document
+  store, i.e. one segment fan-out over the streaming index (or one planned
+  beam search on the monolithic index) instead of per-request searches.
 """
 from __future__ import annotations
 
@@ -15,6 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core import Filter
 from .serve_step import make_serve_fns
 
 
@@ -100,3 +105,61 @@ class ContinuousBatcher:
         while (self.queue or self.active) and self.steps < max_steps:
             self.step()
         return self.finished
+
+
+# ---------------------------------------------------------------------------
+# Retrieval batching (streaming segment fan-out)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class RetrievalRequest:
+    req_id: int
+    query_emb: np.ndarray            # [d_emb]
+    filt: Filter
+    k: int = 10
+
+
+def _filter_key(filt: Filter, k: int):
+    """Hashable identity for grouping: pytree structure + parameter bytes."""
+    leaves, treedef = jax.tree_util.tree_flatten(filt)
+    return (str(treedef), k,
+            tuple(np.asarray(leaf).tobytes() for leaf in leaves))
+
+
+class RetrievalBatcher:
+    """Batches retrieval requests per shared filter.
+
+    Requests arriving between flushes queue up; ``flush()`` partitions them
+    by (filter, k), stacks each group's query embeddings, and issues a
+    single batched ``DocumentStore.retrieve`` per group — over a streaming
+    store that is one pruned multi-segment fan-out amortized across the
+    whole group.  Groups larger than ``max_batch`` are split.
+    """
+
+    def __init__(self, store, ef: int = 64, max_batch: int = 64):
+        self.store = store
+        self.ef = int(ef)
+        self.max_batch = int(max_batch)
+        self.queue: deque = deque()
+
+    def submit(self, req: RetrievalRequest) -> None:
+        self.queue.append(req)
+
+    def __len__(self) -> int:
+        return len(self.queue)
+
+    def flush(self) -> Dict[int, list]:
+        """Drain the queue; returns {req_id: [Document, ...]}."""
+        groups: Dict[object, List[RetrievalRequest]] = {}
+        while self.queue:
+            req = self.queue.popleft()
+            groups.setdefault(_filter_key(req.filt, req.k), []).append(req)
+        results: Dict[int, list] = {}
+        for reqs in groups.values():
+            for lo in range(0, len(reqs), self.max_batch):
+                chunk = reqs[lo:lo + self.max_batch]
+                q = np.stack([r.query_emb for r in chunk]).astype(np.float32)
+                rows = self.store.retrieve(q, chunk[0].filt, k=chunk[0].k,
+                                           ef=self.ef)
+                for r, docs in zip(chunk, rows):
+                    results[r.req_id] = docs
+        return results

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import CubeGraphConfig, CubeGraphIndex, Filter
+from ..streaming import SegmentManager, StreamConfig
 from .serve_step import generate
 
 
@@ -28,24 +29,66 @@ class Document:
 
 
 class DocumentStore:
+    """Filtered-retrieval store with two backends:
+
+    * static (default): one monolithic ``CubeGraphIndex`` built up front,
+      grown via incremental ``insert_batch``;
+    * streaming (``streaming=True``): the LSM-style ``SegmentManager`` —
+      continuous ingest, seal/compaction/TTL lifecycle, segment fan-out
+      queries.  Document list positions double as global point ids.
+    """
+
     def __init__(self, docs: Sequence[Document],
-                 index_cfg: CubeGraphConfig = CubeGraphConfig()):
+                 index_cfg: CubeGraphConfig = CubeGraphConfig(),
+                 streaming: bool = False,
+                 stream_cfg: Optional[StreamConfig] = None):
         self.docs = list(docs)
+        self.streaming = bool(streaming)
         x = np.stack([d.embedding for d in self.docs]).astype(np.float32)
         s = np.stack([d.metadata for d in self.docs]).astype(np.float64)
-        self.index = CubeGraphIndex.build(x, s, index_cfg)
+        if self.streaming:
+            if stream_cfg is None:
+                stream_cfg = StreamConfig(index_cfg=index_cfg)
+            self.manager = SegmentManager(x.shape[1], s.shape[1], stream_cfg)
+            self.manager.ingest(x, s)
+            self.index = None
+        else:
+            self.manager = None
+            self.index = CubeGraphIndex.build(x, s, index_cfg)
 
     def retrieve(self, query_emb: np.ndarray, filt: Filter, k: int,
                  ef: int = 64) -> List[List[Document]]:
-        ids, _ = self.index.query(np.atleast_2d(query_emb), filt, k=k, ef=ef)
+        q = np.atleast_2d(query_emb)
+        if self.streaming:
+            ids, _ = self.manager.query(q, filt, k=k, ef=ef)
+        else:
+            ids, _ = self.index.query(q, filt, k=k, ef=ef)
         return [[self.docs[i] for i in row if i >= 0]
                 for row in np.asarray(ids)]
 
     def insert(self, docs: Sequence[Document]):
+        """Static: incremental graph insertion.  Streaming: delta-buffer
+        ingest (seal policy may cut a new segment)."""
         x = np.stack([d.embedding for d in docs]).astype(np.float32)
         s = np.stack([d.metadata for d in docs]).astype(np.float64)
-        self.index.insert_batch(x, s)
+        if self.streaming:
+            self.manager.ingest(x, s)
+        else:
+            self.index.insert_batch(x, s)
         self.docs.extend(docs)
+
+    def delete(self, positions: Sequence[int]) -> None:
+        """Lazy-delete documents by store position (== global id)."""
+        if self.streaming:
+            self.manager.delete(np.asarray(positions, np.int64))
+        else:
+            self.index.delete(positions)
+
+    def maintenance(self) -> dict:
+        """Streaming lifecycle tick (seal + TTL expiry + compaction)."""
+        if not self.streaming:
+            return {}
+        return self.manager.maintenance()
 
 
 class RAGPipeline:

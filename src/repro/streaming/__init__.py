@@ -1,0 +1,16 @@
+"""Streaming temporal index: LSM-style segment lifecycle for CubeGraph.
+
+- ``segments``  delta buffer (exact kernel scan) + sealed ``CubeGraphIndex``
+                time-range partitions, both speaking global point ids
+- ``manager``   seal policy, compaction (merge + lazy-delete GC), TTL expiry
+- ``query``     temporal segment pruning + fan-out + exact top-k merge
+"""
+from .manager import SegmentManager, StreamConfig
+from .query import query_segments, temporal_bounds
+from .segments import DeltaBuffer, SealedSegment, SegmentQueryStats
+
+__all__ = [
+    "SegmentManager", "StreamConfig",
+    "DeltaBuffer", "SealedSegment", "SegmentQueryStats",
+    "query_segments", "temporal_bounds",
+]

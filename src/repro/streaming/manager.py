@@ -1,0 +1,259 @@
+"""Segment lifecycle: seal policy, compaction, TTL/retention expiry.
+
+``SegmentManager`` owns the delta buffer, the ordered list of sealed
+segments, and a global append-only point store (vectors + metadata by global
+id) that the unified query path uses to re-rank merged candidates exactly.
+
+Lifecycle (all event-time — "now" is the max timestamp ingested so far,
+so replayed histories behave identically to live streams):
+
+  ingest -> delta buffer -> [seal policy] -> sealed CubeGraphIndex segment
+         -> [compaction]  -> merged/GC'd segments
+         -> [retention]   -> whole-segment O(1) drop
+
+Compaction runs synchronously from ``maintenance()`` in this reproduction;
+an async compaction thread is a ROADMAP follow-up.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from ..core import CubeGraphConfig, Filter
+from .segments import DeltaBuffer, SealedSegment, grow_rows
+
+__all__ = ["StreamConfig", "SegmentManager"]
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    """Policy knobs for the streaming lifecycle."""
+
+    time_dim: int = -1                    # metadata column holding time
+    seal_max_points: int = 2048           # seal delta at this many live points
+    seal_max_age: float = math.inf        # ... or when its span exceeds this
+    # Retention is segment-granular for sealed data: a segment drops (O(1))
+    # only once its *entire* span [t_min, t_max] is older than now - ttl, so
+    # a straddling segment retains its older points until it ages out or is
+    # compacted.  Delta-buffer stragglers are masked point-wise.
+    ttl: float = math.inf
+    compact_max_segments: int = 8         # merge adjacent pairs above this
+    compact_deleted_fraction: float = 0.3  # GC a segment above this
+    index_cfg: CubeGraphConfig = dataclasses.field(
+        default_factory=CubeGraphConfig)
+
+
+class SegmentManager:
+    """LSM-style lifecycle manager over DeltaBuffer + SealedSegments."""
+
+    def __init__(self, d: int, m: int, cfg: StreamConfig = StreamConfig()):
+        self.d = int(d)
+        self.m = int(m)
+        self.cfg = cfg
+        self.time_dim = cfg.time_dim % m
+        self.delta = DeltaBuffer(d, m, self.time_dim,
+                                 capacity=min(cfg.seal_max_points, 4096))
+        self.segments: List[SealedSegment] = []     # ordered by t_min
+        self._next_seg_id = 0
+        # global append-only store (doubling growth), indexed by global id
+        self._x = np.zeros((1024, d), np.float32)
+        self._s = np.zeros((1024, m), np.float64)
+        self._alive = np.zeros(1024, bool)
+        self.n_total = 0                            # ids handed out so far
+        self.now = -math.inf                        # event-time watermark
+        self.counters = {"sealed": 0, "compactions": 0, "expired_segments": 0,
+                         "expired_points": 0, "deleted": 0}
+
+    # ------------------------------------------------------------------
+    # Global point store
+    # ------------------------------------------------------------------
+    def _store_grow(self, need: int) -> None:
+        self._x, self._s, self._alive = grow_rows(
+            need, (self._x, 0.0), (self._s, 0.0), (self._alive, False))
+
+    @property
+    def store_x(self) -> np.ndarray:
+        """Vectors of every id ever ingested — [n_total, d] view."""
+        return self._x[: self.n_total]
+
+    @property
+    def store_s(self) -> np.ndarray:
+        return self._s[: self.n_total]
+
+    @property
+    def alive(self) -> np.ndarray:
+        """Liveness per global id (False once deleted or expired)."""
+        return self._alive[: self.n_total]
+
+    @property
+    def n_live(self) -> int:
+        return int(self.alive.sum())
+
+    # ------------------------------------------------------------------
+    # Write path
+    # ------------------------------------------------------------------
+    def ingest(self, x: np.ndarray, s: np.ndarray) -> np.ndarray:
+        """Append a batch; returns assigned global ids.  The batch is fed to
+        the delta buffer in seal-policy-sized chunks, so a bulk load larger
+        than ``seal_max_points`` seals into several time-ordered segments
+        instead of one oversized one."""
+        x = np.atleast_2d(np.asarray(x, np.float32))
+        s = np.atleast_2d(np.asarray(s, np.float64))
+        n_add = x.shape[0]
+        gids = np.arange(self.n_total, self.n_total + n_add, dtype=np.int64)
+        self._store_grow(self.n_total + n_add)
+        self._x[gids] = x
+        self._s[gids] = s
+        self._alive[gids] = True
+        self.n_total += n_add
+        self.now = max(self.now, float(s[:, self.time_dim].max()))
+        lo = 0
+        while lo < n_add:
+            room = max(self.cfg.seal_max_points - self.delta.n_live, 1)
+            take = min(room, n_add - lo)
+            self.delta.append(x[lo:lo + take], s[lo:lo + take],
+                              gids[lo:lo + take])
+            lo += take
+            self.maybe_seal()
+        return gids
+
+    def delete(self, gids: Sequence[int]) -> int:
+        """Lazy delete by global id, wherever each point lives."""
+        gids = np.asarray(gids, np.int64)
+        live = gids[self._alive[gids]]
+        if len(live) == 0:
+            return 0
+        self._alive[live] = False
+        hits = self.delta.delete(live)
+        for seg in self.segments:
+            hits += seg.delete(live)
+        self.counters["deleted"] += hits
+        return hits
+
+    # ------------------------------------------------------------------
+    # Seal policy
+    # ------------------------------------------------------------------
+    def should_seal(self) -> bool:
+        if self.delta.n_live >= self.cfg.seal_max_points:
+            return True
+        return (self.delta.n_live > 0
+                and self.now - self.delta.t_min > self.cfg.seal_max_age)
+
+    def maybe_seal(self) -> Optional[SealedSegment]:
+        return self.seal() if self.should_seal() else None
+
+    def seal(self) -> Optional[SealedSegment]:
+        """Freeze the delta's live points into an immutable indexed segment."""
+        xl, sl, gl = self.delta.live_points()
+        self.delta.reset()
+        if len(gl) == 0:
+            return None
+        seg = SealedSegment.from_points(self._next_seg_id, xl, sl, gl,
+                                        self.time_dim, self.cfg.index_cfg)
+        self._next_seg_id += 1
+        self.segments.append(seg)
+        self.segments.sort(key=lambda g: g.t_min)
+        self.counters["sealed"] += 1
+        return seg
+
+    # ------------------------------------------------------------------
+    # Retention / TTL
+    # ------------------------------------------------------------------
+    def expire(self, now: Optional[float] = None) -> int:
+        """Drop whole segments past retention — O(1) per segment (the index
+        is released, not edited).  Straggler delta points expire via mask."""
+        if not math.isfinite(self.cfg.ttl):
+            return 0
+        cutoff = (self.now if now is None else float(now)) - self.cfg.ttl
+        dropped = 0
+        kept: List[SealedSegment] = []
+        for seg in self.segments:
+            if seg.t_max < cutoff:
+                self._alive[seg.gids] = False
+                dropped += seg.n_live
+                self.counters["expired_segments"] += 1
+            else:
+                kept.append(seg)
+        self.segments = kept
+        n_delta = self.delta.expire_before(cutoff)
+        if n_delta:
+            sel = self.delta.gids[: self.delta.size]
+            t = self._s[sel][:, self.time_dim]
+            self._alive[sel[t < cutoff]] = False
+        self.counters["expired_points"] += dropped + n_delta
+        return dropped + n_delta
+
+    # ------------------------------------------------------------------
+    # Compaction
+    # ------------------------------------------------------------------
+    def compact(self) -> int:
+        """GC heavily-deleted segments and merge adjacent ones; returns the
+        number of rewrite operations performed."""
+        ops = 0
+        # (1) per-segment garbage collection of lazy deletions
+        for i, seg in enumerate(self.segments):
+            if (seg.deleted_fraction() > self.cfg.compact_deleted_fraction
+                    and seg.n_live > 0):
+                self.segments[i] = seg.compacted()
+                ops += 1
+        self.segments = [g for g in self.segments if g.n_live > 0]
+        # (2) merge the adjacent pair with the fewest combined live points
+        #     until the segment count is back under the policy bound
+        while len(self.segments) > self.cfg.compact_max_segments:
+            sizes = [g.n_live for g in self.segments]
+            pair = min(range(len(sizes) - 1),
+                       key=lambda i: sizes[i] + sizes[i + 1])
+            a, b = self.segments[pair], self.segments[pair + 1]
+            merged = self._merge(a, b)
+            self.segments[pair:pair + 2] = [merged] if merged else []
+            ops += 1
+        if ops:
+            self.counters["compactions"] += 1
+        return ops
+
+    def _merge(self, a: SealedSegment, b: SealedSegment
+               ) -> Optional[SealedSegment]:
+        keep_a = np.nonzero(a.index.valid)[0]
+        keep_b = np.nonzero(b.index.valid)[0]
+        gids = np.concatenate([a.gids[keep_a], b.gids[keep_b]])
+        if len(gids) == 0:
+            return None
+        x = np.concatenate([np.asarray(a.index.x)[keep_a],
+                            np.asarray(b.index.x)[keep_b]])
+        s = np.concatenate([a.index.s_np[keep_a], b.index.s_np[keep_b]])
+        seg = SealedSegment.from_points(self._next_seg_id, x, s, gids,
+                                        self.time_dim, self.cfg.index_cfg)
+        self._next_seg_id += 1
+        return seg
+
+    def maintenance(self) -> dict:
+        """One synchronous lifecycle tick: seal (if due) + expire + compact."""
+        sealed = self.maybe_seal() is not None
+        expired = self.expire()
+        compactions = self.compact()
+        return {"sealed": sealed, "expired_points": expired,
+                "compaction_ops": compactions}
+
+    # ------------------------------------------------------------------
+    # Read path (fan-out lives in streaming/query.py)
+    # ------------------------------------------------------------------
+    def query(self, queries: np.ndarray, filt: Optional[Filter], k: int = 10,
+              ef: int = 64, return_stats: bool = False, **kw):
+        from .query import query_segments
+        return query_segments(self, queries, filt, k=k, ef=ef,
+                              return_stats=return_stats, **kw)
+
+    def stats(self) -> dict:
+        return {
+            "n_total": self.n_total,
+            "n_live": self.n_live,
+            "delta_live": self.delta.n_live,
+            "n_segments": len(self.segments),
+            "segment_live": [g.n_live for g in self.segments],
+            "segment_spans": [(g.t_min, g.t_max) for g in self.segments],
+            "now": self.now,
+            **self.counters,
+        }

@@ -1,0 +1,107 @@
+"""Unified query path over the delta buffer and sealed segments.
+
+Planning prunes segments whose ``[t_min, t_max]`` span misses the filter's
+temporal bounds (extracted from its bounding box — half-open
+``IntervalFilter`` windows work directly).  The query then fans out to the
+delta buffer (exact fused-kernel scan) and each surviving sealed segment
+(stitched-graph beam search), and the per-segment top-k candidate lists are
+merged with an exact re-rank through ``topk_over_candidates`` against the
+manager's global point store — so merged distances are consistent no matter
+which segment a candidate came from.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import Filter
+from ..core.graph import squared_norms, topk_over_candidates
+from .segments import SegmentQueryStats
+
+__all__ = ["temporal_bounds", "query_segments"]
+
+
+def temporal_bounds(filt: Optional[Filter], time_dim: int
+                    ) -> Tuple[float, float]:
+    """Filter -> (t_lo, t_hi) constraint on the time dim; ±inf if none."""
+    if filt is None:
+        return -np.inf, np.inf
+    lo, hi = filt.bounding_box()
+    if time_dim >= len(lo):
+        return -np.inf, np.inf
+    return float(lo[time_dim]), float(hi[time_dim])
+
+
+def _store_arrays(manager):
+    """Cached jnp views of the global point store (re-cut when it grows)."""
+    cache = getattr(manager, "_store_cache", None)
+    if cache is not None and cache[0] == manager.n_total:
+        return cache[1], cache[2]
+    x = jnp.asarray(manager.store_x)
+    norms = squared_norms(x)
+    manager._store_cache = (manager.n_total, x, norms)
+    return x, norms
+
+
+def query_segments(manager, queries: np.ndarray, filt: Optional[Filter],
+                   k: int = 10, ef: int = 64, return_stats: bool = False,
+                   **search_kw):
+    """Fan out one query batch across all live segments and merge top-k.
+
+    Returns ``(gids [b, k], dists [b, k])`` — plus a list of per-segment
+    ``SegmentQueryStats`` when ``return_stats`` is set (pruned segments
+    appear with ``pruned=True`` and zero search time).
+    """
+    queries = np.atleast_2d(np.asarray(queries, np.float32))
+    b = queries.shape[0]
+    t_lo, t_hi = temporal_bounds(filt, manager.time_dim)
+    metric = manager.cfg.index_cfg.metric
+
+    blocks_i: List[np.ndarray] = []
+    stats: List[SegmentQueryStats] = []
+
+    if manager.delta.n_live > 0:
+        st = manager.delta.stats()
+        if manager.delta.t_max >= t_lo and manager.delta.t_min <= t_hi:
+            t0 = time.perf_counter()
+            ids, _ = manager.delta.query(queries, filt, k, metric=metric)
+            st.search_ms = (time.perf_counter() - t0) * 1e3
+            blocks_i.append(ids)
+        else:
+            st.pruned = True
+        stats.append(st)
+
+    for seg in manager.segments:
+        st = seg.stats()
+        if seg.n_live == 0 or not seg.overlaps(t_lo, t_hi):
+            st.pruned = True
+            stats.append(st)
+            continue
+        t0 = time.perf_counter()
+        ids, _ = seg.query(queries, filt, k=k, ef=ef, **search_kw)
+        st.search_ms = (time.perf_counter() - t0) * 1e3
+        blocks_i.append(ids)
+        stats.append(st)
+
+    if not blocks_i:
+        out_i = np.full((b, k), -1, np.int64)
+        out_d = np.full((b, k), np.inf, np.float32)
+        return (out_i, out_d, stats) if return_stats else (out_i, out_d)
+
+    # Exact merge: global ids are disjoint across segments, so concatenate
+    # the candidate lists and re-rank against the global store.
+    cand = np.concatenate(blocks_i, axis=1)
+    x_all, norms = _store_arrays(manager)
+    ids, dd = topk_over_candidates(queries, cand.astype(np.int32), x_all,
+                                   norms, min(k, cand.shape[1]),
+                                   metric=metric)
+    ids = np.asarray(ids)
+    dd = np.asarray(dd, np.float32)
+    out_i = np.full((b, k), -1, np.int64)
+    out_d = np.full((b, k), np.inf, np.float32)
+    out_i[:, : ids.shape[1]] = ids
+    out_d[:, : ids.shape[1]] = dd
+    return (out_i, out_d, stats) if return_stats else (out_i, out_d)

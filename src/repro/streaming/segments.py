@@ -1,0 +1,237 @@
+"""Streaming segments: mutable delta buffer + immutable sealed segments.
+
+LSM-style write path for the temporal workload (ROADMAP: continuous
+ingestion).  Fresh points land in an append-only in-memory ``DeltaBuffer``
+answered by brute-force fused filtered top-k (the Pallas kernel — exact, and
+fast while the buffer is small).  When the buffer hits the seal policy it
+freezes into a ``SealedSegment``: a time-range-partitioned ``CubeGraphIndex``
+answered by the stitched-graph beam search.  Both speak *global* point ids so
+results from any mix of segments merge directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core import CubeGraphConfig, CubeGraphIndex, Filter
+from ..kernels import filtered_topk
+
+__all__ = ["DeltaBuffer", "SealedSegment", "SegmentQueryStats"]
+
+
+def grow_rows(need: int, *pairs):
+    """Amortized-doubling row growth for parallel arrays.
+
+    ``pairs`` are ``(array, fill_value)``; all arrays share axis-0 length.
+    Returns the grown arrays (unchanged objects if capacity suffices).
+    """
+    cap = len(pairs[0][0])
+    if need <= cap:
+        return tuple(a for a, _ in pairs)
+    while cap < need:
+        cap *= 2
+    return tuple(
+        np.concatenate([a, np.full((cap - len(a),) + a.shape[1:], fill,
+                                   a.dtype)])
+        for a, fill in pairs)
+
+
+@dataclasses.dataclass
+class SegmentQueryStats:
+    """Per-segment accounting for one fan-out query (returned to callers)."""
+
+    segment_id: int
+    kind: str                   # "delta" | "sealed"
+    n_live: int
+    t_min: float
+    t_max: float
+    pruned: bool = False        # skipped by temporal range pruning
+    search_ms: float = 0.0
+
+
+class DeltaBuffer:
+    """Append-only write buffer with lazy deletion and exact filtered top-k.
+
+    Arrays grow amortized-doubling; deletes flip a validity mask.  Queries
+    scan only live rows through ``filtered_topk`` (kernel path when the
+    filter encodes, jnp fallback otherwise), so delta answers are exact.
+    """
+
+    def __init__(self, d: int, m: int, time_dim: int, capacity: int = 1024):
+        self.d = int(d)
+        self.m = int(m)
+        self.time_dim = int(time_dim)
+        cap = max(int(capacity), 16)
+        self.x = np.zeros((cap, d), np.float32)
+        self.s = np.zeros((cap, m), np.float64)
+        self.gids = np.full(cap, -1, np.int64)
+        self.valid = np.zeros(cap, bool)
+        self.size = 0
+        self.t_min = np.inf
+        self.t_max = -np.inf
+
+    def __len__(self) -> int:
+        return self.size
+
+    @property
+    def n_live(self) -> int:
+        return int(self.valid[: self.size].sum())
+
+    def append(self, x: np.ndarray, s: np.ndarray, gids: np.ndarray) -> None:
+        x = np.asarray(x, np.float32)
+        s = np.asarray(s, np.float64)
+        n_add = x.shape[0]
+        self.x, self.s, self.gids, self.valid = grow_rows(
+            self.size + n_add, (self.x, 0.0), (self.s, 0.0),
+            (self.gids, -1), (self.valid, False))
+        lo = self.size
+        self.x[lo:lo + n_add] = x
+        self.s[lo:lo + n_add] = s
+        self.gids[lo:lo + n_add] = np.asarray(gids, np.int64)
+        self.valid[lo:lo + n_add] = True
+        self.size += n_add
+        t = s[:, self.time_dim]
+        self.t_min = min(self.t_min, float(t.min()))
+        self.t_max = max(self.t_max, float(t.max()))
+
+    def delete(self, gids: Sequence[int]) -> int:
+        """Flip validity for any of ``gids`` present here; returns #hits."""
+        if self.size == 0:
+            return 0
+        hit = np.isin(self.gids[: self.size], np.asarray(gids, np.int64))
+        hit &= self.valid[: self.size]
+        self.valid[: self.size][hit] = False
+        return int(hit.sum())
+
+    def expire_before(self, cutoff: float) -> int:
+        """Invalidate live rows with timestamp < cutoff; returns #expired."""
+        if self.size == 0:
+            return 0
+        old = self.valid[: self.size] & (self.s[: self.size, self.time_dim]
+                                         < cutoff)
+        self.valid[: self.size][old] = False
+        return int(old.sum())
+
+    def live_points(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(x, s, gids) of live rows — copied, safe to hand to a builder."""
+        keep = np.nonzero(self.valid[: self.size])[0]
+        return (self.x[keep].copy(), self.s[keep].copy(),
+                self.gids[keep].copy())
+
+    def reset(self) -> None:
+        self.valid[: self.size] = False
+        self.size = 0
+        self.t_min = np.inf
+        self.t_max = -np.inf
+
+    def query(self, queries: np.ndarray, filt: Optional[Filter], k: int,
+              metric: str = "l2") -> Tuple[np.ndarray, np.ndarray]:
+        """Exact filtered top-k over live rows -> (global ids, dists)."""
+        b = np.atleast_2d(queries).shape[0]
+        xl, sl, gl = self.live_points()
+        if len(gl) == 0:
+            return (np.full((b, k), -1, np.int64),
+                    np.full((b, k), np.inf, np.float32))
+        ids, dd = filtered_topk(np.atleast_2d(queries), xl, sl, filt,
+                                min(k, len(gl)), metric=metric)
+        ids = np.asarray(ids)
+        dd = np.asarray(dd, np.float32)
+        out_i = np.full((b, k), -1, np.int64)
+        out_d = np.full((b, k), np.inf, np.float32)
+        out_i[:, : ids.shape[1]] = np.where(ids >= 0, gl[np.maximum(ids, 0)],
+                                            -1)
+        out_d[:, : ids.shape[1]] = np.where(ids >= 0, dd, np.inf)
+        return out_i, out_d
+
+    def stats(self, segment_id: int = -1) -> SegmentQueryStats:
+        return SegmentQueryStats(segment_id=segment_id, kind="delta",
+                                 n_live=self.n_live, t_min=self.t_min,
+                                 t_max=self.t_max)
+
+
+class SealedSegment:
+    """Immutable time-range partition backed by a ``CubeGraphIndex``.
+
+    The index speaks segment-local ids; ``gids`` maps them back to global
+    ids.  Deletion is the index's lazy validity mask; the segment itself is
+    never restructured in place — compaction replaces it wholesale.
+    """
+
+    def __init__(self, seg_id: int, index: CubeGraphIndex, gids: np.ndarray,
+                 time_dim: int):
+        self.seg_id = int(seg_id)
+        self.index = index
+        self.gids = np.asarray(gids, np.int64)
+        self.time_dim = int(time_dim)
+        t = self.index.s_np[:, time_dim]
+        self.t_min = float(t.min()) if len(t) else np.inf
+        self.t_max = float(t.max()) if len(t) else -np.inf
+        # sorted view for O(log n) global -> local id translation
+        self._order = np.argsort(self.gids)
+        self._sorted_gids = self.gids[self._order]
+
+    @classmethod
+    def from_points(cls, seg_id: int, x: np.ndarray, s: np.ndarray,
+                    gids: np.ndarray, time_dim: int,
+                    cfg: CubeGraphConfig) -> "SealedSegment":
+        index = CubeGraphIndex.build(np.asarray(x, np.float32),
+                                     np.asarray(s, np.float64), cfg)
+        return cls(seg_id, index, gids, time_dim)
+
+    @property
+    def n(self) -> int:
+        return self.index.n
+
+    @property
+    def n_live(self) -> int:
+        return int(self.index.valid.sum())
+
+    def deleted_fraction(self) -> float:
+        return self.index.deleted_fraction()
+
+    def overlaps(self, t_lo: float, t_hi: float) -> bool:
+        return self.t_max >= t_lo and self.t_min <= t_hi
+
+    def locate(self, gids: Sequence[int]) -> np.ndarray:
+        """Global ids -> local ids (-1 where not in this segment)."""
+        g = np.asarray(gids, np.int64)
+        pos = np.searchsorted(self._sorted_gids, g)
+        pos_c = np.clip(pos, 0, len(self._sorted_gids) - 1)
+        ok = (len(self._sorted_gids) > 0) & (self._sorted_gids[pos_c] == g)
+        return np.where(ok, self._order[pos_c], -1)
+
+    def delete(self, gids: Sequence[int]) -> int:
+        local = self.locate(gids)
+        local = local[local >= 0]
+        if len(local):
+            self.index.delete(local)
+        return len(local)
+
+    def compacted(self) -> "SealedSegment":
+        """GC lazy deletions: rebuild over live points (same seg id/gids)."""
+        keep = np.nonzero(self.index.valid)[0]
+        return SealedSegment(self.seg_id, self.index.compact(),
+                             self.gids[keep], self.time_dim)
+
+    def query(self, queries: np.ndarray, filt: Optional[Filter], k: int,
+              ef: int = 64, **kw) -> Tuple[np.ndarray, np.ndarray]:
+        """Graph search -> (global ids [b, k], dists [b, k]).  ``filt=None``
+        becomes a pass-all box over this segment's grid bounds (the core
+        index requires a predicate for planning)."""
+        if filt is None:
+            from ..core import BoxFilter
+            g = self.index.grid
+            filt = BoxFilter(lo=np.asarray(g.lo, np.float32),
+                             hi=np.asarray(g.hi, np.float32))
+        ids, dd = self.index.query(np.atleast_2d(queries), filt, k=k, ef=ef,
+                                   **kw)
+        ids = np.asarray(ids)
+        gids = np.where(ids >= 0, self.gids[np.maximum(ids, 0)], -1)
+        return gids, np.asarray(dd, np.float32)
+
+    def stats(self) -> SegmentQueryStats:
+        return SegmentQueryStats(segment_id=self.seg_id, kind="sealed",
+                                 n_live=self.n_live, t_min=self.t_min,
+                                 t_max=self.t_max)

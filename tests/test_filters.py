@@ -1,7 +1,10 @@
 """Filter predicates vs analytic oracles (incl. hypothesis property tests)."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.filters import BallFilter, BoxFilter, ComposeFilter, PolygonFilter
 from repro.core.workloads import (make_ball_filter, make_box_filter,

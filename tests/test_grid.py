@@ -1,7 +1,9 @@
 """Grid math: cube ids, adjacency, layer selection (Prop. 1 bounds)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.grid import GridSpec
 

@@ -3,7 +3,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.filters import BallFilter, BoxFilter
+from repro.core.filters import (BallFilter, BoxFilter, ComposeFilter,
+                                IntervalFilter)
 from repro.core.workloads import (make_ball_filter, make_box_filter,
                                   make_compose_filter, make_dataset,
                                   make_polygon_filter, ground_truth)
@@ -85,6 +86,65 @@ def test_filtered_topk_filter_shapes(mkf):
     gt_i, _ = ground_truth(x, s, q, f, 10)
     for a, b in zip(np.asarray(ids), gt_i):
         assert set(a[a >= 0]) == set(b[b >= 0])
+
+
+def test_interval_halfopen_encoding():
+    """[t0, inf) encodes as 'box' with NO synthetic upper bound: the packed
+    hi row keeps its pass-all default and only padding rows (meta=+2e30)
+    fail it."""
+    f = IntervalFilter(dim=2, lo=jnp.float32(0.4))
+    enc = encode_filter(f, 3)
+    assert enc is not None
+    kind, params = enc
+    assert kind == "box"
+    assert params[0, 2] == np.float32(0.4)
+    assert np.all(params[1, :] >= 1e30)          # upper edge untouched
+    x, s = make_dataset(600, 16, 3, seed=9)
+    ids, _ = filtered_topk(x[:6], x, s, f, 10)
+    gt_i, _ = ground_truth(x, s, x[:6], f, 10)
+    for a, b in zip(np.asarray(ids), gt_i):
+        assert set(a[a >= 0]) == set(b[b >= 0])
+    assert np.all(s[np.asarray(ids)[np.asarray(ids) >= 0], 2] >= 0.4)
+
+
+@pytest.mark.parametrize("lo,hi", [(0.3, None), (None, 0.6), (0.2, 0.7)])
+def test_interval_and_box_composition(lo, hi):
+    """box AND interval folds into one packed box (open ends stay open)."""
+    box = BoxFilter(lo=jnp.asarray([0.1, 0.1, 0.0]),
+                    hi=jnp.asarray([0.9, 0.9, 1.0]))
+    iv = IntervalFilter(dim=2,
+                        lo=None if lo is None else jnp.float32(lo),
+                        hi=None if hi is None else jnp.float32(hi))
+    f = ComposeFilter(box, iv, "and")
+    enc = encode_filter(f, 3)
+    assert enc is not None and enc[0] == "box"
+    x, s = make_dataset(600, 16, 3, seed=10)
+    ids, _ = filtered_topk(x[:6], x, s, f, 10)
+    gt_i, _ = ground_truth(x, s, x[:6], f, 10)
+    for a, b in zip(np.asarray(ids), gt_i):
+        assert set(a[a >= 0]) == set(b[b >= 0])
+
+
+def test_ball_and_interval_box_ball_kind():
+    """ball AND interval uses the fused 'box_ball' kind (no jnp fallback)."""
+    ball = BallFilter(center=jnp.asarray([0.5, 0.5]), radius=jnp.float32(0.35))
+    iv = IntervalFilter(dim=2, lo=jnp.float32(0.25), hi=jnp.float32(0.9))
+    f = ComposeFilter(ball, iv, "and")
+    enc = encode_filter(f, 3)
+    assert enc is not None and enc[0] == "box_ball"
+    x, s = make_dataset(800, 24, 3, seed=11)
+    ids, _ = filtered_topk(x[:6], x, s, f, 10)
+    gt_i, _ = ground_truth(x, s, x[:6], f, 10)
+    for a, b in zip(np.asarray(ids), gt_i):
+        assert set(a[a >= 0]) == set(b[b >= 0])
+    # the ref oracle agrees with the object predicate for this kind
+    rng = np.random.default_rng(12)
+    sp = np.full((1500, 128), 2e30, np.float32)
+    sp[:, :3] = rng.uniform(0, 1, size=(1500, 3))
+    want = np.asarray(f.contains(jnp.asarray(sp[:, :3])))
+    got = np.asarray(ref.filter_mask_ref(jnp.asarray(sp[:, :3]), enc[0],
+                                         jnp.asarray(enc[1])))
+    assert np.array_equal(got, want)
 
 
 def test_filtered_topk_empty_filter():

@@ -2,7 +2,9 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import CubeGraphConfig, CubeGraphIndex
 from repro.core.workloads import (ground_truth, make_ball_filter,

@@ -1,0 +1,221 @@
+"""Streaming temporal index: segment lifecycle + unified fan-out query path."""
+import numpy as np
+import pytest
+
+from repro.core import (BoxFilter, ComposeFilter, CubeGraphConfig,
+                        CubeGraphIndex, IntervalFilter)
+from repro.core.workloads import ground_truth, make_dataset, recall
+from repro.streaming import (SegmentManager, StreamConfig, temporal_bounds)
+
+IDX_CFG = CubeGraphConfig(n_layers=3, m_intra=10, m_cross=3)
+
+
+def _timed_dataset(n, d=24, m=3, seed=0):
+    """Dataset whose last metadata dim is a monotone event-time in [0, 1)."""
+    x, s = make_dataset(n, d, m, seed=seed)
+    s[:, m - 1] = np.arange(n) / n
+    return x, s
+
+
+def _queries(x, b=8, seed=2):
+    rng = np.random.default_rng(seed)
+    return (x[rng.integers(0, len(x), b)]
+            + 0.05 * rng.normal(size=(b, x.shape[1])).astype(np.float32))
+
+
+def _window(t_lo, t_hi):
+    """Spatial box (pass-all) AND a temporal interval on dim 2."""
+    return ComposeFilter(
+        BoxFilter(lo=np.zeros(3, np.float32), hi=np.ones(3, np.float32)),
+        IntervalFilter(dim=2, lo=np.float32(t_lo), hi=np.float32(t_hi)),
+        "and")
+
+
+def test_seal_threshold_honored():
+    """Delta freezes into sealed segments at the configured live-point count."""
+    cfg = StreamConfig(time_dim=2, seal_max_points=500, index_cfg=IDX_CFG)
+    x, s = _timed_dataset(1750)
+    mgr = SegmentManager(24, 3, cfg)
+    for lo in range(0, 1750, 250):
+        mgr.ingest(x[lo:lo + 250], s[lo:lo + 250])
+        assert mgr.delta.n_live < cfg.seal_max_points
+    assert len(mgr.segments) == 3
+    assert mgr.delta.n_live == 250
+    assert mgr.n_live == 1750
+    # sealed segments tile the time axis in order
+    spans = [(g.t_min, g.t_max) for g in mgr.segments]
+    assert spans == sorted(spans)
+
+
+def test_ttl_expiry_drops_segments():
+    """Retention drops whole out-of-window segments; queries never see them."""
+    cfg = StreamConfig(time_dim=2, seal_max_points=400, ttl=0.45,
+                       index_cfg=IDX_CFG)
+    x, s = _timed_dataset(2000)
+    mgr = SegmentManager(24, 3, cfg)
+    mgr.ingest(x, s)
+    n_before = len(mgr.segments)
+    dropped = mgr.expire()
+    assert dropped > 0
+    assert len(mgr.segments) < n_before
+    cutoff = mgr.now - cfg.ttl
+    assert all(g.t_max >= cutoff for g in mgr.segments)
+    # expired points are dead everywhere: never returned, liveness mask off
+    ids, _ = mgr.query(_queries(x), None, k=10, ef=96)
+    got = ids[ids >= 0]
+    assert np.all(s[got, 2] >= cutoff - 0.25)  # only in-retention segments
+    assert not mgr.alive[s[:, 2] < cutoff - 0.25].any()
+
+
+def test_fanout_matches_monolithic():
+    """Acceptance: after interleaved ingest/seal/expire, a time-filtered
+    top-k from the SegmentManager matches (recall >= 0.95) the same query
+    against a fresh monolithic CubeGraphIndex over the live points."""
+    cfg = StreamConfig(time_dim=2, seal_max_points=700, ttl=0.5,
+                       index_cfg=IDX_CFG)
+    n = 3000
+    x, s = _timed_dataset(n)
+    mgr = SegmentManager(24, 3, cfg)
+    rng = np.random.default_rng(7)
+    for lo in range(0, n, 300):
+        mgr.ingest(x[lo:lo + 300], s[lo:lo + 300])
+        if lo == 1500:                      # mid-stream deletions
+            dead = rng.choice(lo, size=200, replace=False)
+            mgr.delete(dead)
+        if lo == 2100:
+            mgr.expire()                    # mid-stream retention pass
+    assert len(mgr.segments) >= 2 and mgr.delta.n_live > 0   # mixed fan-out
+
+    live = np.nonzero(mgr.alive)[0]
+    mono = CubeGraphIndex.build(x[live], s[live], IDX_CFG)
+    q = _queries(x)
+    f = _window(0.55, 0.95)
+    got, _ = mgr.query(q, f, k=10, ef=128)
+    ref_local, _ = mono.query(q, f, k=10, ef=128)
+    ref = np.where(ref_local >= 0, live[np.maximum(ref_local, 0)], -1)
+    assert recall(got, ref) >= 0.95
+    # and against the exact oracle over live points
+    gt, _ = ground_truth(x, s, q, f, 10, valid=mgr.alive)
+    assert recall(got, gt) >= 0.95
+
+
+def test_temporal_pruning_skips_segments():
+    """Segments whose time span misses the filter window are never searched."""
+    cfg = StreamConfig(time_dim=2, seal_max_points=500, index_cfg=IDX_CFG)
+    x, s = _timed_dataset(2000)
+    mgr = SegmentManager(24, 3, cfg)
+    mgr.ingest(x, s)
+    f = _window(0.8, 1.0)
+    assert temporal_bounds(f, 2) == (pytest.approx(0.8), pytest.approx(1.0))
+    ids, _, stats = mgr.query(_queries(x), f, k=10, ef=96, return_stats=True)
+    pruned = [t for t in stats if t.pruned]
+    searched = [t for t in stats if not t.pruned]
+    assert pruned and searched
+    assert all(t.t_max < 0.8 for t in pruned)
+    assert np.all(s[ids[ids >= 0], 2] >= 0.8 - 1e-9)
+
+
+def test_halfopen_interval_query():
+    """[t0, inf) windows need no synthetic upper bound anywhere in the path."""
+    cfg = StreamConfig(time_dim=2, seal_max_points=400, index_cfg=IDX_CFG)
+    x, s = _timed_dataset(1200)
+    mgr = SegmentManager(24, 3, cfg)
+    mgr.ingest(x, s)
+    f = IntervalFilter(dim=2, lo=np.float32(0.6))
+    q = _queries(x)
+    ids, _ = mgr.query(q, f, k=10, ef=96)
+    gt, _ = ground_truth(x, s, q, f, 10)
+    assert recall(ids, gt) >= 0.9
+    assert np.all(s[ids[ids >= 0], 2] >= 0.6)
+
+
+def test_compaction_merges_and_gcs():
+    """Compaction GCs heavily-deleted segments and bounds the segment count."""
+    cfg = StreamConfig(time_dim=2, seal_max_points=250,
+                       compact_max_segments=3, compact_deleted_fraction=0.3,
+                       index_cfg=IDX_CFG)
+    x, s = _timed_dataset(2000)
+    mgr = SegmentManager(24, 3, cfg)
+    mgr.ingest(x, s)
+    assert len(mgr.segments) == 8
+    rng = np.random.default_rng(3)
+    dead = rng.choice(1000, size=500, replace=False)   # hammer early segments
+    mgr.delete(dead)
+    mgr.compact()
+    assert len(mgr.segments) <= 3
+    assert all(g.deleted_fraction() == 0.0 or g.n_live > 0
+               for g in mgr.segments)
+    # results stay correct after the rewrite
+    q = _queries(x)
+    alive = mgr.alive
+    gt, _ = ground_truth(x, s, q, None, 10, valid=alive)
+    ids, _ = mgr.query(q, None, k=10, ef=128)
+    assert recall(ids, gt) >= 0.9
+    assert not (set(ids[ids >= 0].tolist()) & set(dead.tolist()))
+
+
+def test_interval_on_middle_dim_plans_correctly():
+    """Regression: filters constraining only a prefix or a middle dim (bare
+    IntervalFilter / BallFilter) must plan against an m-dim grid without
+    broadcasting errors or over-constrained cube sets."""
+    from repro.core import BallFilter
+    x, s = _timed_dataset(1000)
+    idx = CubeGraphIndex.build(x, s, IDX_CFG)
+    q = _queries(x, b=4)
+    f_mid = IntervalFilter(dim=1, lo=np.float32(0.3), hi=np.float32(0.7))
+    ids, _ = idx.query(q, f_mid, k=10, ef=128)
+    gt, _ = ground_truth(x, s, q, f_mid, 10)
+    assert recall(ids, gt) >= 0.9
+    f_ball = BallFilter(center=np.asarray([0.5, 0.5], np.float32),
+                        radius=np.float32(0.3))      # 2D ball, m=3 index
+    ids, _ = idx.query(q, f_ball, k=10, ef=128)
+    gt, _ = ground_truth(x, s, q, f_ball, 10)
+    assert recall(ids, gt) >= 0.9
+    # and through the streaming manager with a non-last time dim
+    cfg = StreamConfig(time_dim=1, seal_max_points=400, index_cfg=IDX_CFG)
+    mgr = SegmentManager(24, 3, cfg)
+    mgr.ingest(x, s)
+    ids, _ = mgr.query(q, f_mid, k=10, ef=128)
+    gt_mid, _ = ground_truth(x, s, q, f_mid, 10)
+    assert recall(ids, gt_mid) >= 0.9
+
+
+def test_streaming_document_store_and_batcher():
+    """Serving wiring: streaming DocumentStore ingest + grouped fan-out."""
+    from repro.serving.batching import RetrievalBatcher, RetrievalRequest
+    from repro.serving.rag import Document, DocumentStore
+    x, s = _timed_dataset(900, d=16)
+    rng = np.random.default_rng(4)
+    docs = [Document(doc_id=i,
+                     tokens=rng.integers(2, 99, size=8).astype(np.int32),
+                     embedding=x[i], metadata=s[i]) for i in range(600)]
+    store = DocumentStore(docs, IDX_CFG, streaming=True,
+                          stream_cfg=StreamConfig(time_dim=2,
+                                                  seal_max_points=250,
+                                                  index_cfg=IDX_CFG))
+    assert len(store.manager.segments) >= 1
+    # streaming ingest of late-arriving documents
+    late = [Document(doc_id=i, tokens=rng.integers(2, 99, size=8).astype(np.int32),
+                     embedding=x[i], metadata=s[i]) for i in range(600, 900)]
+    store.insert(late)
+    assert store.manager.n_total == 900
+
+    f_recent = IntervalFilter(dim=2, lo=np.float32(0.5))
+    f_all = _window(0.0, 1.0)
+    batcher = RetrievalBatcher(store, ef=96)
+    for i in range(6):
+        batcher.submit(RetrievalRequest(req_id=i, query_emb=x[i],
+                                        filt=f_recent if i % 2 else f_all,
+                                        k=5))
+    out = batcher.flush()
+    assert len(out) == 6 and len(batcher) == 0
+    gt, _ = ground_truth(x[:900], s[:900], x[:6], f_recent, 5)
+    for i, docs_i in out.items():
+        assert docs_i, f"request {i} returned nothing"
+        if i % 2:   # recent-window requests only return recent docs
+            assert all(d.metadata[2] >= 0.5 for d in docs_i)
+
+    store.delete(np.arange(0, 100))
+    out2 = store.retrieve(x[:4], f_all, k=5)
+    assert all(d.doc_id >= 100 for row in out2 for d in row)
+    assert isinstance(store.maintenance(), dict)

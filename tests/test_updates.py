@@ -80,6 +80,29 @@ def test_compact_after_delete(setup):
     assert recall(ids, gt_c) >= 0.8
 
 
+def test_insert_delete_compact_preserves_recall(setup):
+    """Full update-path interplay: build -> insert_batch -> delete -> compact
+    keeps filtered recall over the surviving points."""
+    x, s, q, f = setup
+    idx = CubeGraphIndex.build(x[:1200], s[:1200], CFG)
+    idx.insert_batch(x[1200:], s[1200:])
+    rng = np.random.default_rng(8)
+    dead = rng.choice(2000, size=600, replace=False)
+    idx.delete(dead)
+    assert abs(idx.deleted_fraction() - 0.3) < 0.01
+    # deletions hit both original and freshly-inserted points
+    assert (dead < 1200).any() and (dead >= 1200).any()
+    compacted = idx.compact()
+    alive = np.ones(2000, bool)
+    alive[dead] = False
+    keep = np.nonzero(alive)[0]
+    assert compacted.n == len(keep)
+    assert compacted.deleted_fraction() == 0.0
+    gt_c, _ = ground_truth(x[keep], s[keep], q, f, 10)
+    ids, _ = compacted.query(q, f, k=10, ef=96)
+    assert recall(ids, gt_c) >= 0.8
+
+
 def test_save_load_roundtrip(tmp_path, setup):
     """Persisted index answers queries identically after reload."""
     from repro.core.cubegraph import load_index, save_index
