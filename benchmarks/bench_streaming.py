@@ -1,10 +1,17 @@
-"""Exp-9: streaming temporal index — ingest throughput and query behavior
-under a live write stream (segment lifecycle: seal -> delete -> compact).
+"""Exp-9 / Exp-10: streaming temporal index — lifecycle behavior under a
+live write stream, and the mesh-sharded sealed-segment read path.
 
-Reported:
+Exp-9 (lifecycle):
   * ingest throughput (points/s) including seal-triggered segment builds
   * time-windowed query latency + recall at checkpoints DURING ingest
   * query latency before vs after compaction (delete-heavy steady state)
+
+Exp-10 (sharded mesh):
+  * per-query latency of the sharded kernel read path on N simulated
+    devices (each sealed segment split into N shards, one fused dispatch
+    over segments x shards) vs the single-device scan (N=1) and the
+    per-segment graph fan-out — recall against brute-force ground truth
+    is reported for every path (the kernel paths are exact by design).
 """
 from __future__ import annotations
 
@@ -15,6 +22,7 @@ import numpy as np
 from repro.core import (BoxFilter, ComposeFilter, CubeGraphConfig,
                         IntervalFilter)
 from repro.core.workloads import ground_truth, make_dataset, recall
+from repro.distributed.segment_shards import make_shard_mesh
 from repro.streaming import SegmentManager, StreamConfig
 
 from .common import BENCH_D, BENCH_N, BENCH_Q, csv_row, record, timed_queries
@@ -99,6 +107,49 @@ def run():
             f"recall={r_post:.3f};"
             f"speedup={dt_pre / max(dt_post, 1e-9):.2f}x")
     record("exp9_streaming", out)
+    return out
+
+
+def run_sharded():
+    """Exp-10: sharded sealed-segment search over a (simulated) device mesh."""
+    n = max(BENCH_N, 8000)
+    d = BENCH_D
+    x, s = make_dataset(n, d, 3, seed=31)
+    s[:, 2] = np.arange(n) / n
+    rng = np.random.default_rng(32)
+    q = x[rng.integers(0, n, BENCH_Q)] \
+        + 0.05 * rng.normal(size=(BENCH_Q, d)).astype(np.float32)
+    f = _window(0.25, 0.9)
+    gt, _ = ground_truth(x, s, q, f, 10)
+    mesh = make_shard_mesh()
+
+    out = {"n_points": n, "mesh_devices": int(mesh.devices.size),
+           "note": ("1 real device on this container; each shard is one "
+                    "simulated device of the mesh"),
+           "paths": []}
+
+    def one_path(label, n_shards, **query_kw):
+        mgr = SegmentManager(d, 3, StreamConfig(
+            time_dim=2, seal_max_points=2048, n_shards=n_shards,
+            index_cfg=CFG), shard_mesh=mesh)
+        mgr.ingest(x, s)
+        dt, ids = timed_queries(
+            lambda: mgr.query(q, f, k=10, **query_kw)[0], reps=5)
+        row = {"path": label, "n_shards": n_shards,
+               "us_per_query": round(dt / BENCH_Q * 1e6, 1),
+               "recall": round(recall(ids, gt), 4)}
+        out["paths"].append(row)
+        csv_row(f"exp10/{label}", dt * 1e6,
+                f"recall={row['recall']};us_per_query={row['us_per_query']}")
+        return row
+
+    one_path("graph_fanout", 0, ef=96)
+    base = one_path("sharded_1dev", 1)
+    for ns in (2, 4, 8):
+        row = one_path(f"sharded_{ns}dev", ns)
+        row["vs_single_device"] = round(
+            base["us_per_query"] / max(row["us_per_query"], 1e-9), 3)
+    record("exp10_sharded_mesh", out)
     return out
 
 

@@ -16,27 +16,28 @@ def main() -> None:
     from .common import flush_results
 
     sections = [
-        ("exp1_search_efficiency", bench_search),
-        ("exp2_multidim", bench_multidim),
-        ("exp3_filter_shapes", bench_filter_shapes),
-        ("exp4_index_cost", bench_index_cost),
-        ("exp5_dynamic_updates", bench_updates),
-        ("exp6_merge_count", bench_merge_count),
-        ("exp7_scalability", bench_scalability),
-        ("exp8_distributions", bench_distributions),
-        ("exp9_streaming", bench_streaming),
-        ("a5_aspect_ratio", bench_aspect_ratio),
-        ("a6_merge_strategy", bench_merge_strategy),
-        ("kernels", bench_kernels),
+        ("exp1_search_efficiency", bench_search.run),
+        ("exp2_multidim", bench_multidim.run),
+        ("exp3_filter_shapes", bench_filter_shapes.run),
+        ("exp4_index_cost", bench_index_cost.run),
+        ("exp5_dynamic_updates", bench_updates.run),
+        ("exp6_merge_count", bench_merge_count.run),
+        ("exp7_scalability", bench_scalability.run),
+        ("exp8_distributions", bench_distributions.run),
+        ("exp9_streaming", bench_streaming.run),
+        ("exp10_sharded_mesh", bench_streaming.run_sharded),
+        ("a5_aspect_ratio", bench_aspect_ratio.run),
+        ("a6_merge_strategy", bench_merge_strategy.run),
+        ("kernels", bench_kernels.run),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")
-    for name, mod in sections:
+    for name, fn in sections:
         if only and only not in name:
             continue
         t0 = time.time()
         try:
-            mod.run()
+            fn()
         except Exception as e:  # noqa: BLE001 — keep the suite going
             print(f"{name},0,ERROR={type(e).__name__}:{e}")
         print(f"# section {name} took {time.time()-t0:.1f}s", flush=True)

@@ -21,6 +21,8 @@ _CURRENT: Optional[Mesh] = None
 
 @contextlib.contextmanager
 def use_mesh_hints(mesh: Mesh):
+    """Register ``mesh`` as the active mesh for ``constrain`` hints
+    (and enter it) for the duration of the with-block."""
     global _CURRENT
     prev = _CURRENT
     _CURRENT = mesh
@@ -32,6 +34,8 @@ def use_mesh_hints(mesh: Mesh):
 
 
 def mesh_axis_size(axis) -> int:
+    """Product of the registered mesh's sizes for ``axis`` (a name or
+    tuple of names); 1 when no mesh is registered."""
     if _CURRENT is None:
         return 1
     if isinstance(axis, tuple):
@@ -43,6 +47,7 @@ def mesh_axis_size(axis) -> int:
 
 
 def has_axis(axis) -> bool:
+    """Whether every name in ``axis`` exists on the registered mesh."""
     if _CURRENT is None:
         return False
     names = set(_CURRENT.axis_names)
@@ -71,6 +76,7 @@ def constrain(x: jax.Array, *spec):
 
 
 def dp_axes():
+    """The registered mesh's data-parallel axis name(s), or None."""
     if _CURRENT is None:
         return None
     return ("pod", "data") if "pod" in _CURRENT.axis_names else "data"

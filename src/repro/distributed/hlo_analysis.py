@@ -73,8 +73,13 @@ def collective_bytes(hlo_text: str) -> Dict[str, int]:
     return out
 
 
-def flops_and_bytes(cost: dict) -> Dict[str, float]:
-    """Extract per-device flops / bytes from compiled.cost_analysis()."""
+def flops_and_bytes(cost) -> Dict[str, float]:
+    """Extract per-device flops / bytes from compiled.cost_analysis().
+
+    Older jax returns a one-element list of dicts (one per device), newer
+    returns the dict directly; accept both."""
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
     return {
         "flops": float(cost.get("flops", 0.0)),
         "bytes": float(cost.get("bytes accessed", 0.0)),

@@ -1,0 +1,262 @@
+"""Mesh-sharded sealed-segment search: segments × shards in one dispatch.
+
+Each sealed segment's live point set is partitioned round-robin into
+``n_shards`` equal-capacity shards; all shards of all segments are stacked
+into one ``[g, cap, ·]`` pack (``g = n_segments × n_shards``) so a query
+fans out over every shard with a single jitted dispatch of the fused
+filtered-top-k kernel (``kernels.ops.sharded_filtered_topk``), followed by
+an exact in-jit merge of the shard-local ``(gid, dist)`` top-k lists.
+
+Placed on a mesh with a ``"shard"`` axis (``make_shard_mesh``), the stacked
+arrays are partitioned across devices along the shard axis, so each device
+scans only its resident shards and only the tiny ``[g, b, k]`` candidate
+lists cross the interconnect for the merge — the TigerVector-style
+decoupling of partitioned vector storage from query fan-out.
+
+Exactness: every shard computes the same fp32 distance the monolithic
+kernel would for the same point, each true global top-k member is by
+definition inside its own shard's top-k, and global ids are disjoint across
+shards — so concatenating the per-shard lists and taking the global top-k
+reproduces the single-device result bit-for-bit.
+
+Dead points are masked by overwriting their metadata rows with the
+``PAD_META`` sentinel (rejected by every predicate, including ``None``), so
+deletions never require restacking the pack.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..core import Filter
+from ..kernels import PAD_META, sharded_filtered_topk
+
+__all__ = ["SegmentShardSource", "ShardPack", "build_shard_pack",
+           "make_shard_mesh", "pack_search"]
+
+_MPAD = 128                      # metadata lane padding (kernel layout)
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentShardSource:
+    """One segment's live points, ready to be sharded (plain arrays so this
+    module stays import-independent of ``repro.streaming``)."""
+
+    seg_id: int
+    x: np.ndarray                # [n, d] fp32 live vectors
+    s: np.ndarray                # [n, m] metadata
+    gids: np.ndarray             # [n] int64 global ids
+    t_min: float
+    t_max: float
+
+
+def make_shard_mesh(n_devices: Optional[int] = None) -> Mesh:
+    """A 1-D device mesh with axis ``"shard"`` over (up to) ``n_devices``.
+
+    On a single-device host this degenerates to a mesh of one — the pack
+    code path is identical, which is how the sharded search is exercised in
+    CI while production runs hand in a real multi-device mesh.
+    """
+    from ..launch.mesh import mesh_compat_kwargs
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else min(int(n_devices), len(devs))
+    return Mesh(np.asarray(devs[:n]).reshape(n), ("shard",),
+                **mesh_compat_kwargs(1))
+
+
+def _round_up(v: int, mult: int) -> int:
+    return ((max(v, 1) + mult - 1) // mult) * mult
+
+
+@dataclasses.dataclass
+class ShardPack:
+    """Stacked, padded, device-resident shards of a set of sealed segments.
+
+    A pack is immutable in shape: built once per segment-list generation
+    (``epoch``) and reused for every query until the segment list changes.
+    Deletions between rebuilds are applied with :meth:`mark_dead` (metadata
+    sentinel overwrite + lazy re-upload) — no restacking.
+    """
+
+    epoch: int
+    n_shards: int                    # shards per segment
+    m: int                           # real metadata dimension
+    seg_ids: np.ndarray              # [g] owning segment id per pack row
+    t_min: np.ndarray                # [g] owning segment's time span
+    t_max: np.ndarray
+    x: jnp.ndarray                   # [g, cap, dpad] device stack
+    gids_dev: jnp.ndarray            # [g, cap] int32 (-1 padding)
+    _s_host: np.ndarray              # [g, cap, MPAD] host master copy
+    _sharding: Optional[NamedSharding]
+    _gid_sorted: np.ndarray          # sorted live gids (for mark_dead)
+    _gid_flat_pos: np.ndarray        # flat (row*cap + col) per sorted gid
+    _s_dev: Optional[jnp.ndarray] = None
+
+    @property
+    def n_rows(self) -> int:
+        """Pack rows = segments × shards-per-segment."""
+        return int(self.x.shape[0])
+
+    @property
+    def cap(self) -> int:
+        """Padded per-shard point capacity."""
+        return int(self.x.shape[1])
+
+    @property
+    def nbytes(self) -> int:
+        """Device bytes held by the pack (vectors + metadata + gids)."""
+        return int(self.x.size * 4 + self._s_host.size * 4
+                   + self.gids_dev.size * 4)
+
+    def _put(self, arr: np.ndarray) -> jnp.ndarray:
+        if self._sharding is not None:
+            return jax.device_put(arr, self._sharding)
+        return jnp.asarray(arr)
+
+    @property
+    def s_dev(self) -> jnp.ndarray:
+        """Device metadata stack, re-uploaded lazily after `mark_dead`."""
+        if self._s_dev is None:
+            self._s_dev = self._put(self._s_host)
+        return self._s_dev
+
+    def mark_dead(self, gids: Sequence[int]) -> int:
+        """Mask points by global id: their metadata rows become ``PAD_META``
+        so every subsequent query's predicate rejects them.  Returns the
+        number of pack rows touched; the device copy refreshes on the next
+        query (one upload, not one per delete)."""
+        g = np.asarray(gids, np.int64)
+        if len(g) == 0 or len(self._gid_sorted) == 0:
+            return 0
+        pos = np.searchsorted(self._gid_sorted, g)
+        pos_c = np.clip(pos, 0, len(self._gid_sorted) - 1)
+        ok = self._gid_sorted[pos_c] == g
+        flat = self._gid_flat_pos[pos_c[ok]]
+        if len(flat) == 0:
+            return 0
+        rows, cols = np.divmod(flat, self.cap)
+        self._s_host[rows, cols, :] = PAD_META
+        self._s_dev = None
+        return len(flat)
+
+    def sync_alive(self, alive: np.ndarray) -> int:
+        """Mask every packed point whose gid is dead in ``alive`` (the
+        manager's liveness bitmap).  Used once at pack installation to catch
+        deletions that raced the build; later deletions arrive one-by-one
+        through :meth:`mark_dead`."""
+        dead = self._gid_sorted[~alive[self._gid_sorted]]
+        return self.mark_dead(dead)
+
+    def active_rows(self, t_lo: float, t_hi: float) -> np.ndarray:
+        """[g] bool — pack rows whose segment span overlaps [t_lo, t_hi]."""
+        return (self.t_max >= t_lo) & (self.t_min <= t_hi)
+
+
+def build_shard_pack(sources: Sequence[SegmentShardSource], n_shards: int,
+                     epoch: int = 0, mesh: Optional[Mesh] = None,
+                     cap_multiple: int = 256) -> ShardPack:
+    """Partition each segment round-robin into ``n_shards`` shards and stack
+    all of them into one padded device pack.
+
+    ``cap_multiple`` matches the kernel's candidate-tile size so row padding
+    is settled here once instead of on every query.  With ``mesh`` given,
+    the stack is placed with the shard axis partitioned across the mesh
+    (requires ``g % mesh devices == 0``, which holds whenever ``n_shards``
+    is a multiple of the device count).
+    """
+    n_shards = max(int(n_shards), 1)
+    if not sources:
+        raise ValueError("build_shard_pack needs at least one segment")
+    m = sources[0].s.shape[1]
+    d = sources[0].x.shape[1]
+    dpad = _round_up(d, 128)
+    per_row: List[Tuple[int, np.ndarray, SegmentShardSource]] = []
+    for src in sources:
+        order = np.arange(len(src.gids))
+        for sh in range(n_shards):
+            per_row.append((src.seg_id, order[sh::n_shards], src))
+    g = len(per_row)
+    cap = _round_up(max(len(idx) for _, idx, _ in per_row), cap_multiple)
+    x = np.zeros((g, cap, dpad), np.float32)
+    s = np.full((g, cap, _MPAD), PAD_META, np.float32)
+    gid = np.full((g, cap), -1, np.int32)
+    seg_ids = np.zeros(g, np.int64)
+    t_min = np.zeros(g, np.float64)
+    t_max = np.zeros(g, np.float64)
+    for row, (sid, idx, src) in enumerate(per_row):
+        nn = len(idx)
+        x[row, :nn, :d] = src.x[idx]
+        s[row, :nn, :] = 0.0
+        s[row, :nn, :m] = src.s[idx]
+        gid[row, :nn] = src.gids[idx]
+        seg_ids[row] = sid
+        t_min[row], t_max[row] = src.t_min, src.t_max
+    sharding = None
+    if mesh is not None and g % mesh.devices.size == 0:
+        sharding = NamedSharding(mesh, P("shard", None, None))
+    flat_gid = gid.reshape(-1).astype(np.int64)
+    live = np.nonzero(flat_gid >= 0)[0]
+    order = np.argsort(flat_gid[live])
+    pack = ShardPack(
+        epoch=epoch, n_shards=n_shards, m=m, seg_ids=seg_ids,
+        t_min=t_min, t_max=t_max,
+        x=jnp.zeros(1), gids_dev=jnp.zeros(1),   # placed below
+        _s_host=s, _sharding=sharding,
+        _gid_sorted=flat_gid[live][order], _gid_flat_pos=live[order])
+    pack.x = pack._put(x)
+    gid_sharding = (NamedSharding(mesh, P("shard", None))
+                    if sharding is not None else None)
+    pack.gids_dev = (jax.device_put(gid, gid_sharding)
+                     if gid_sharding is not None else jnp.asarray(gid))
+    return pack
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _merge_shard_topk(ids, dd, gid_stack, active, k):
+    """Shard-local (ids, dists) [g, b, k'] -> exact global (gids, dists)
+    [b, k].  Inactive rows and misses are masked to +inf before one
+    ``top_k`` over the concatenated shard axis."""
+    g = jax.vmap(lambda gr, im: gr[jnp.maximum(im, 0)])(gid_stack, ids)
+    valid = (ids >= 0) & active[:, None, None]
+    dd = jnp.where(valid, dd, jnp.inf)
+    b = dd.shape[1]
+    alld = dd.transpose(1, 0, 2).reshape(b, -1)
+    allg = g.transpose(1, 0, 2).reshape(b, -1)
+    neg, sel = jax.lax.top_k(-alld, k)
+    out_d = -neg
+    out_g = jnp.take_along_axis(allg, sel, axis=1)
+    return jnp.where(jnp.isfinite(out_d), out_g, -1), out_d
+
+
+def pack_search(pack: ShardPack, queries: np.ndarray, filt: Optional[Filter],
+                k: int, t_lo: float = -np.inf, t_hi: float = np.inf,
+                metric: str = "l2") -> Tuple[np.ndarray, np.ndarray]:
+    """Fan one query batch out over every active shard of the pack and merge
+    the shard-local top-k exactly.
+
+    Temporal pruning happens via the ``active`` mask (host-computed from the
+    per-row segment spans) rather than by reshaping the dispatch, so the jit
+    cache sees one static shape per pack.  Returns ``(gids [b, k] int64,
+    dists [b, k] fp32)`` with ``-1`` / ``+inf`` padding.
+    """
+    queries = np.atleast_2d(np.asarray(queries, np.float32))
+    b = queries.shape[0]
+    kk = min(k, pack.cap)                 # per-shard list length
+    # merged width: for k > cap the per-shard lists (= whole shards) still
+    # hold up to n_rows * kk candidates, so the global top-k stays exact
+    k_out = min(k, pack.n_rows * kk)
+    ids, dd = sharded_filtered_topk(queries, pack.x, pack.s_dev, filt, kk,
+                                    metric=metric, m=pack.m)
+    active = jnp.asarray(pack.active_rows(t_lo, t_hi))
+    out_g, out_d = _merge_shard_topk(ids, dd, pack.gids_dev, active, k_out)
+    gids = np.full((b, k), -1, np.int64)
+    dists = np.full((b, k), np.inf, np.float32)
+    gids[:, :k_out] = np.asarray(out_g, np.int64)
+    dists[:, :k_out] = np.asarray(out_d, np.float32)
+    return gids, dists

@@ -39,6 +39,7 @@ def _axis_size(mesh: Mesh, name) -> int:
 
 
 def dp_axes(mesh: Mesh):
+    """The mesh's data-parallel axis names (with 'pod' when present)."""
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
 
 
@@ -130,6 +131,7 @@ def param_pspec(path: Tuple[str, ...], shape: Tuple[int, ...],
 
 
 def params_shardings(specs: Params, mesh: Mesh, cfg: ArchConfig) -> Params:
+    """NamedShardings for a parameter pytree via ``param_pspec`` rules."""
     flat, treedef = jax.tree_util.tree_flatten_with_path(specs)
     out = []
     for path, leaf in flat:
@@ -176,6 +178,8 @@ def opt_state_shardings(param_shardings: Params, mesh: Mesh,
 
 
 def batch_shardings(mesh: Mesh, batch_spec: Params) -> Params:
+    """Batch pytree shardings: leading dim over the dp axes when it
+    divides, replicated otherwise."""
     dp = dp_axes(mesh)
     dp = dp if len(dp) > 1 else dp[0]
 
@@ -228,5 +232,6 @@ def cache_shardings(mesh: Mesh, cache_spec: Params, cfg: ArchConfig) -> Params:
 
 
 def replicated(mesh: Mesh, spec: Params) -> Params:
+    """Fully-replicated NamedShardings for every leaf of ``spec``."""
     return jax.tree.map(
         lambda leaf: NamedSharding(mesh, P(*([None] * len(leaf.shape)))), spec)

@@ -19,11 +19,15 @@ from . import ref
 from .distance import pairwise_dist_kernel_call
 from .filtered_topk import filtered_topk_kernel_call
 
-__all__ = ["pairwise_dist", "filtered_topk", "encode_filter",
-           "exact_filtered_search"]
+__all__ = ["pairwise_dist", "filtered_topk", "sharded_filtered_topk",
+           "encode_filter", "exact_filtered_search", "PAD_META"]
 
 _POS = 1e30
 _PAD_META = 2e30
+# Metadata sentinel for padding / dead rows: every filter kind (including
+# "none") rejects rows whose metadata carries this value, so consumers that
+# stack ragged shards can mask rows by overwriting their metadata.
+PAD_META = _PAD_META
 
 
 def _pad_to(a, axis, mult, value):
@@ -175,6 +179,71 @@ def filtered_topk(q, x, s, filt: Optional[Filter], k: int,
         qp, xp, sp, jnp.asarray(params), kind=kind, kpad=kpad, metric=metric,
         tq=tq, tn=tn, interpret=interpret)
     return ids[:bq, :k], dd[:bq, :k]
+
+
+def sharded_filtered_topk(q, xs, ss, filt: Optional[Filter], k: int,
+                          metric: str = "l2", use_kernel: bool = True,
+                          tq: int = 64, tn: int = 256, interpret: bool = True,
+                          m: Optional[int] = None):
+    """Shard-parallel fused filtered top-k: one dispatch over a stacked shard
+    axis.
+
+    ``q`` is ``[bq, d]``; ``xs`` / ``ss`` are ``[g, n, d]`` / ``[g, n, m]``
+    stacks of ``g`` equal-capacity shards (pad ragged shards with
+    ``PAD_META`` metadata rows — they fail every predicate, including
+    ``filt=None``).  The fused kernel is ``vmap``-ed over the shard axis, so
+    the whole stack is a single jitted dispatch; placed on a mesh with a
+    ``"shard"`` axis, XLA partitions that axis across devices and each
+    device scans only its resident shards.
+
+    Returns ``(ids [g, bq, k], dists [g, bq, k])`` with *shard-local* ids
+    (-1 for misses) and ascending exact distances — shard results merge
+    exactly because every shard computes the same per-point distance the
+    monolithic kernel would.
+
+    ``m`` is the real metadata dimension when ``ss`` arrives pre-padded to
+    the 128-lane layout (filter encoding and the jnp fallback must see only
+    the live columns).
+    """
+    q = jnp.asarray(q, jnp.float32)
+    xs = jnp.asarray(xs, jnp.float32)
+    ss = jnp.asarray(ss, jnp.float32)
+    bq, n = q.shape[0], xs.shape[1]
+    m = ss.shape[2] if m is None else int(m)
+    enc = encode_filter(filt, m) if use_kernel else None
+    if enc is None:
+        # jnp fallback mirroring filtered_topk's (arbitrary Filter objects);
+        # zero-pad q to the (possibly pre-padded) stack width — padding
+        # lanes are zero in xs, so they contribute nothing to distances
+        qf = _pad_to(q, 1, xs.shape[2], 0.0)
+
+        def one(x, s):
+            d = (ref.pairwise_sq_l2(qf, x) if metric == "l2"
+                 else ref.pairwise_neg_ip(qf, x))
+            ok = (s[:, 0] < _POS)
+            if filt is not None:
+                ok &= filt.contains(s[:, :m])
+            d = jnp.where(ok[None, :], d, jnp.inf)
+            neg, ids = jax.lax.top_k(-d, min(k, n))
+            dd = -neg
+            return jnp.where(jnp.isfinite(dd), ids, -1), dd
+        ids, dd = jax.vmap(one)(xs, ss)
+        return ids, dd
+    kind, params = enc
+    kpad = _next_pow2(max(k, 8))
+    tn = max(tn, kpad)
+    qp = _pad_to(_pad_to(q, 1, 128, 0.0), 0, tq, 0.0)
+    xp = _pad_to(_pad_to(xs, 2, 128, 0.0), 1, tn, 0.0)
+    sp = _pad_to(_pad_to(ss, 2, 128, 0.0), 1, tn, _PAD_META)
+    pj = jnp.asarray(params)
+
+    def one(x, s):
+        return filtered_topk_kernel_call(qp, x, s, pj, kind=kind, kpad=kpad,
+                                         metric=metric, tq=tq, tn=tn,
+                                         interpret=interpret)
+
+    dd, ids = jax.vmap(one)(xp, sp)
+    return ids[:, :bq, :k], dd[:, :bq, :k]
 
 
 def exact_filtered_search(q, x, s, filt: Optional[Filter], k: int,

@@ -133,12 +133,22 @@ class RetrievalBatcher:
     single batched ``DocumentStore.retrieve`` per group — over a streaming
     store that is one pruned multi-segment fan-out amortized across the
     whole group.  Groups larger than ``max_batch`` are split.
+
+    With ``maintenance_every > 0`` (streaming stores only), every that-many
+    flushes trigger one lifecycle tick with compaction — the expensive
+    multi-segment rewrite — pushed to the manager's background thread.
+    The tick itself still pays inline for expiry bookkeeping and, when the
+    seal policy fires, for indexing one delta's worth of points
+    (``seal_max_points`` bounds that build).
     """
 
-    def __init__(self, store, ef: int = 64, max_batch: int = 64):
+    def __init__(self, store, ef: int = 64, max_batch: int = 64,
+                 maintenance_every: int = 0):
         self.store = store
         self.ef = int(ef)
         self.max_batch = int(max_batch)
+        self.maintenance_every = int(maintenance_every)
+        self._flushes = 0
         self.queue: deque = deque()
 
     def submit(self, req: RetrievalRequest) -> None:
@@ -162,4 +172,9 @@ class RetrievalBatcher:
                                            ef=self.ef)
                 for r, docs in zip(chunk, rows):
                     results[r.req_id] = docs
+        self._flushes += 1
+        if (self.maintenance_every > 0
+                and self._flushes % self.maintenance_every == 0
+                and getattr(self.store, "streaming", False)):
+            self.store.maintenance(async_compaction=True)
         return results

@@ -36,12 +36,18 @@ class DocumentStore:
     * streaming (``streaming=True``): the LSM-style ``SegmentManager`` —
       continuous ingest, seal/compaction/TTL lifecycle, segment fan-out
       queries.  Document list positions double as global point ids.
+
+    With ``stream_cfg.n_shards >= 1`` sealed segments are answered by the
+    mesh-sharded kernel scan; pass ``shard_mesh``
+    (``repro.distributed.segment_shards.make_shard_mesh()``) to spread the
+    shards across a device mesh in a serving replica.
     """
 
     def __init__(self, docs: Sequence[Document],
                  index_cfg: CubeGraphConfig = CubeGraphConfig(),
                  streaming: bool = False,
-                 stream_cfg: Optional[StreamConfig] = None):
+                 stream_cfg: Optional[StreamConfig] = None,
+                 shard_mesh=None):
         self.docs = list(docs)
         self.streaming = bool(streaming)
         x = np.stack([d.embedding for d in self.docs]).astype(np.float32)
@@ -49,7 +55,8 @@ class DocumentStore:
         if self.streaming:
             if stream_cfg is None:
                 stream_cfg = StreamConfig(index_cfg=index_cfg)
-            self.manager = SegmentManager(x.shape[1], s.shape[1], stream_cfg)
+            self.manager = SegmentManager(x.shape[1], s.shape[1], stream_cfg,
+                                          shard_mesh=shard_mesh)
             self.manager.ingest(x, s)
             self.index = None
         else:
@@ -84,11 +91,14 @@ class DocumentStore:
         else:
             self.index.delete(positions)
 
-    def maintenance(self) -> dict:
-        """Streaming lifecycle tick (seal + TTL expiry + compaction)."""
+    def maintenance(self, async_compaction: bool = False) -> dict:
+        """Streaming lifecycle tick (seal + TTL expiry + compaction + store
+        GC).  ``async_compaction`` runs the compaction rounds on the
+        manager's background thread so the serving loop never blocks on an
+        index rebuild."""
         if not self.streaming:
             return {}
-        return self.manager.maintenance()
+        return self.manager.maintenance(async_compaction=async_compaction)
 
 
 class RAGPipeline:

@@ -1,16 +1,20 @@
 """Streaming temporal index: LSM-style segment lifecycle for CubeGraph.
 
 - ``segments``  delta buffer (exact kernel scan) + sealed ``CubeGraphIndex``
-                time-range partitions, both speaking global point ids
-- ``manager``   seal policy, compaction (merge + lazy-delete GC), TTL expiry
-- ``query``     temporal segment pruning + fan-out + exact top-k merge
+                time-range partitions, both speaking global point ids, plus
+                the chunked GC-able ``PointStore`` ledger
+- ``manager``   seal policy, off-path compaction (plan/execute/publish with
+                an epoch guard), TTL expiry, point-store GC
+- ``query``     temporal segment pruning + fan-out (per-segment graph search
+                or mesh-sharded kernel scan) + exact ``(gid, dist)`` merge
 """
-from .manager import SegmentManager, StreamConfig
-from .query import query_segments, temporal_bounds
-from .segments import DeltaBuffer, SealedSegment, SegmentQueryStats
+from .manager import CompactionPlan, SegmentManager, StreamConfig
+from .query import merge_topk, query_segments, temporal_bounds
+from .segments import (DeltaBuffer, PointStore, SealedSegment,
+                       SegmentQueryStats)
 
 __all__ = [
-    "SegmentManager", "StreamConfig",
-    "DeltaBuffer", "SealedSegment", "SegmentQueryStats",
-    "query_segments", "temporal_bounds",
+    "CompactionPlan", "SegmentManager", "StreamConfig",
+    "DeltaBuffer", "PointStore", "SealedSegment", "SegmentQueryStats",
+    "merge_topk", "query_segments", "temporal_bounds",
 ]

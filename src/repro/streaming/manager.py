@@ -1,31 +1,45 @@
-"""Segment lifecycle: seal policy, compaction, TTL/retention expiry.
+"""Segment lifecycle: seal policy, off-path compaction, TTL/retention expiry.
 
 ``SegmentManager`` owns the delta buffer, the ordered list of sealed
-segments, and a global append-only point store (vectors + metadata by global
-id) that the unified query path uses to re-rank merged candidates exactly.
+segments, a per-gid liveness bitmap, and a chunked :class:`PointStore`
+ledger (off the query hot path since PR 2 — the unified query merges
+per-segment ``(gid, dist)`` pairs directly, and the ledger is
+garbage-collected chunk-wise as points retire).
 
 Lifecycle (all event-time — "now" is the max timestamp ingested so far,
-so replayed histories behave identically to live streams):
+so replayed histories behave identically to live streams)::
 
   ingest -> delta buffer -> [seal policy] -> sealed CubeGraphIndex segment
          -> [compaction]  -> merged/GC'd segments
          -> [retention]   -> whole-segment O(1) drop
 
-Compaction runs synchronously from ``maintenance()`` in this reproduction;
-an async compaction thread is a ROADMAP follow-up.
+Compaction consistency (the epoch guarantee)
+--------------------------------------------
+Compaction is split into ``plan`` (cheap, under the manager lock) /
+``execute`` (expensive index rebuilds, lock-free, off-thread via
+:meth:`SegmentManager.compact_async`) / ``publish`` (atomic swap under the
+lock).  Every mutation of the segment *list* bumps ``epoch``; queries take
+a snapshot ``(epoch, segments)`` under the lock and run entirely against
+it, so an in-flight query never observes a half-merged list.  At publish
+time, deletions that landed while a replacement segment was being built
+are re-applied to it before the swap, and the query path additionally
+filters its merged result through the liveness bitmap — so a point deleted
+before a query began is never returned, no matter how the query interleaves
+with a concurrent compaction.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Optional, Sequence
+import threading
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from ..core import CubeGraphConfig, Filter
-from .segments import DeltaBuffer, SealedSegment, grow_rows
+from .segments import DeltaBuffer, PointStore, SealedSegment, grow_rows
 
-__all__ = ["StreamConfig", "SegmentManager"]
+__all__ = ["CompactionPlan", "StreamConfig", "SegmentManager"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,14 +56,49 @@ class StreamConfig:
     ttl: float = math.inf
     compact_max_segments: int = 8         # merge adjacent pairs above this
     compact_deleted_fraction: float = 0.3  # GC a segment above this
+    # Sealed-segment read path: 0 = per-segment stitched-graph beam search;
+    # >= 1 = partition each sealed segment into this many shards and scan
+    # them with the fused kernel in one dispatch (exact; distributes across
+    # a device mesh when one is attached).
+    n_shards: int = 0
+    store_chunk: int = 4096               # PointStore GC granularity (rows)
     index_cfg: CubeGraphConfig = dataclasses.field(
         default_factory=CubeGraphConfig)
 
 
-class SegmentManager:
-    """LSM-style lifecycle manager over DeltaBuffer + SealedSegments."""
+@dataclasses.dataclass
+class CompactionPlan:
+    """One compaction round, planned against a segment-list snapshot.
 
-    def __init__(self, d: int, m: int, cfg: StreamConfig = StreamConfig()):
+    ``gc`` segments are rewritten in place (lazy-deletion reclamation);
+    each ``merges`` group of adjacent segments collapses into one.  The
+    plan pins the ``epoch`` it was made at; ``publish`` drops any operation
+    whose victims have left the list since (expired or already replaced).
+    """
+
+    epoch: int
+    gc: List[SealedSegment]
+    merges: List[List[SealedSegment]]
+    drop_empty: bool = False
+
+    @property
+    def n_ops(self) -> int:
+        """Rewrite operations this plan will perform if fully applied."""
+        return len(self.gc) + sum(len(g) - 1 for g in self.merges)
+
+
+class SegmentManager:
+    """LSM-style lifecycle manager over DeltaBuffer + SealedSegments.
+
+    Thread-safety: all list/ledger mutations take ``_lock``; reads snapshot
+    under the lock and run lock-free (see the module docstring for the
+    compaction epoch guarantee).  ``shard_mesh`` (optional) places the
+    sharded read path's stacked segment shards across a device mesh built
+    by ``repro.distributed.segment_shards.make_shard_mesh``.
+    """
+
+    def __init__(self, d: int, m: int, cfg: StreamConfig = StreamConfig(),
+                 shard_mesh=None):
         self.d = int(d)
         self.m = int(m)
         self.cfg = cfg
@@ -57,31 +106,26 @@ class SegmentManager:
         self.delta = DeltaBuffer(d, m, self.time_dim,
                                  capacity=min(cfg.seal_max_points, 4096))
         self.segments: List[SealedSegment] = []     # ordered by t_min
+        self.shard_mesh = shard_mesh
+        self.epoch = 0                              # segment-list generation
+        self._lock = threading.RLock()
         self._next_seg_id = 0
-        # global append-only store (doubling growth), indexed by global id
-        self._x = np.zeros((1024, d), np.float32)
-        self._s = np.zeros((1024, m), np.float64)
+        self._compact_thread: Optional[threading.Thread] = None
+        self._pack = None                           # cached ShardPack
+        self.store = PointStore(d, m, chunk=cfg.store_chunk)
         self._alive = np.zeros(1024, bool)
-        self.n_total = 0                            # ids handed out so far
         self.now = -math.inf                        # event-time watermark
         self.counters = {"sealed": 0, "compactions": 0, "expired_segments": 0,
-                         "expired_points": 0, "deleted": 0}
+                         "expired_points": 0, "deleted": 0,
+                         "store_gc_points": 0}
 
     # ------------------------------------------------------------------
-    # Global point store
+    # Liveness ledger / point store
     # ------------------------------------------------------------------
-    def _store_grow(self, need: int) -> None:
-        self._x, self._s, self._alive = grow_rows(
-            need, (self._x, 0.0), (self._s, 0.0), (self._alive, False))
-
     @property
-    def store_x(self) -> np.ndarray:
-        """Vectors of every id ever ingested — [n_total, d] view."""
-        return self._x[: self.n_total]
-
-    @property
-    def store_s(self) -> np.ndarray:
-        return self._s[: self.n_total]
+    def n_total(self) -> int:
+        """Global ids handed out so far (monotone)."""
+        return self.store.n_total
 
     @property
     def alive(self) -> np.ndarray:
@@ -90,7 +134,20 @@ class SegmentManager:
 
     @property
     def n_live(self) -> int:
+        """Number of live points across the delta buffer and all segments."""
         return int(self.alive.sum())
+
+    def get_points(self, gids: Sequence[int]):
+        """(x, s, present) rows from the ledger — ``present`` is False for
+        ids whose store chunk was garbage-collected."""
+        return self.store.get(gids)
+
+    def gc_store(self) -> int:
+        """Free point-store chunks with no live id left; returns #rows."""
+        with self._lock:
+            freed = self.store.gc(self.alive)
+        self.counters["store_gc_points"] += freed
+        return freed
 
     # ------------------------------------------------------------------
     # Write path
@@ -103,33 +160,34 @@ class SegmentManager:
         x = np.atleast_2d(np.asarray(x, np.float32))
         s = np.atleast_2d(np.asarray(s, np.float64))
         n_add = x.shape[0]
-        gids = np.arange(self.n_total, self.n_total + n_add, dtype=np.int64)
-        self._store_grow(self.n_total + n_add)
-        self._x[gids] = x
-        self._s[gids] = s
-        self._alive[gids] = True
-        self.n_total += n_add
-        self.now = max(self.now, float(s[:, self.time_dim].max()))
-        lo = 0
-        while lo < n_add:
-            room = max(self.cfg.seal_max_points - self.delta.n_live, 1)
-            take = min(room, n_add - lo)
-            self.delta.append(x[lo:lo + take], s[lo:lo + take],
-                              gids[lo:lo + take])
-            lo += take
-            self.maybe_seal()
+        with self._lock:
+            gids = self.store.append(x, s)
+            self._alive = grow_rows(self.n_total, (self._alive, False))[0]
+            self._alive[gids] = True
+            self.now = max(self.now, float(s[:, self.time_dim].max()))
+            lo = 0
+            while lo < n_add:
+                room = max(self.cfg.seal_max_points - self.delta.n_live, 1)
+                take = min(room, n_add - lo)
+                self.delta.append(x[lo:lo + take], s[lo:lo + take],
+                                  gids[lo:lo + take])
+                lo += take
+                self.maybe_seal()
         return gids
 
     def delete(self, gids: Sequence[int]) -> int:
         """Lazy delete by global id, wherever each point lives."""
         gids = np.asarray(gids, np.int64)
-        live = gids[self._alive[gids]]
-        if len(live) == 0:
-            return 0
-        self._alive[live] = False
-        hits = self.delta.delete(live)
-        for seg in self.segments:
-            hits += seg.delete(live)
+        with self._lock:
+            live = gids[self._alive[gids]]
+            if len(live) == 0:
+                return 0
+            self._alive[live] = False
+            hits = self.delta.delete(live)
+            for seg in self.segments:
+                hits += seg.delete(live)
+            if self._pack is not None:
+                self._pack.mark_dead(live)
         self.counters["deleted"] += hits
         return hits
 
@@ -137,25 +195,29 @@ class SegmentManager:
     # Seal policy
     # ------------------------------------------------------------------
     def should_seal(self) -> bool:
+        """Whether the delta buffer is due to freeze into a segment."""
         if self.delta.n_live >= self.cfg.seal_max_points:
             return True
         return (self.delta.n_live > 0
                 and self.now - self.delta.t_min > self.cfg.seal_max_age)
 
     def maybe_seal(self) -> Optional[SealedSegment]:
+        """Seal if the policy says so; returns the new segment or None."""
         return self.seal() if self.should_seal() else None
 
     def seal(self) -> Optional[SealedSegment]:
         """Freeze the delta's live points into an immutable indexed segment."""
-        xl, sl, gl = self.delta.live_points()
-        self.delta.reset()
-        if len(gl) == 0:
-            return None
-        seg = SealedSegment.from_points(self._next_seg_id, xl, sl, gl,
-                                        self.time_dim, self.cfg.index_cfg)
-        self._next_seg_id += 1
-        self.segments.append(seg)
-        self.segments.sort(key=lambda g: g.t_min)
+        with self._lock:
+            xl, sl, gl = self.delta.live_points()
+            self.delta.reset()
+            if len(gl) == 0:
+                return None
+            seg = SealedSegment.from_points(self._next_seg_id, xl, sl, gl,
+                                            self.time_dim, self.cfg.index_cfg)
+            self._next_seg_id += 1
+            self.segments.append(seg)
+            self.segments.sort(key=lambda g: g.t_min)
+            self.epoch += 1
         self.counters["sealed"] += 1
         return seg
 
@@ -167,93 +229,235 @@ class SegmentManager:
         is released, not edited).  Straggler delta points expire via mask."""
         if not math.isfinite(self.cfg.ttl):
             return 0
-        cutoff = (self.now if now is None else float(now)) - self.cfg.ttl
-        dropped = 0
-        kept: List[SealedSegment] = []
-        for seg in self.segments:
-            if seg.t_max < cutoff:
-                self._alive[seg.gids] = False
-                dropped += seg.n_live
-                self.counters["expired_segments"] += 1
-            else:
-                kept.append(seg)
-        self.segments = kept
-        n_delta = self.delta.expire_before(cutoff)
-        if n_delta:
-            sel = self.delta.gids[: self.delta.size]
-            t = self._s[sel][:, self.time_dim]
-            self._alive[sel[t < cutoff]] = False
-        self.counters["expired_points"] += dropped + n_delta
-        return dropped + n_delta
+        with self._lock:
+            cutoff = (self.now if now is None else float(now)) - self.cfg.ttl
+            dropped = 0
+            kept: List[SealedSegment] = []
+            for seg in self.segments:
+                if seg.t_max < cutoff:
+                    self._alive[seg.gids] = False
+                    dropped += seg.n_live
+                    self.counters["expired_segments"] += 1
+                else:
+                    kept.append(seg)
+            if len(kept) != len(self.segments):
+                self.segments = kept
+                self.epoch += 1
+            gl = self.delta.expire_before(cutoff)
+            self._alive[gl] = False
+        self.counters["expired_points"] += dropped + len(gl)
+        return dropped + len(gl)
 
     # ------------------------------------------------------------------
-    # Compaction
+    # Compaction (plan under lock / execute lock-free / publish atomically)
     # ------------------------------------------------------------------
-    def compact(self) -> int:
-        """GC heavily-deleted segments and merge adjacent ones; returns the
-        number of rewrite operations performed."""
+    def plan_compaction(self) -> Optional[CompactionPlan]:
+        """Pick this round's rewrites against the current segment list.
+
+        Merging simulates the greedy smallest-adjacent-pair policy on live
+        counts, so one plan carries the full set of merge *groups* needed to
+        get the list back under ``compact_max_segments``.  Returns None when
+        there is nothing to do.
+        """
+        with self._lock:
+            segs = [g for g in self.segments if g.n_live > 0]
+            drop_empty = len(segs) != len(self.segments)
+            groups = [[g] for g in segs]
+            while len(groups) > self.cfg.compact_max_segments:
+                sizes = [sum(x.n_live for x in grp) for grp in groups]
+                i = min(range(len(sizes) - 1),
+                        key=lambda j: sizes[j] + sizes[j + 1])
+                groups[i:i + 2] = [groups[i] + groups[i + 1]]
+            merges = [grp for grp in groups if len(grp) > 1]
+            merged = {id(g) for grp in merges for g in grp}
+            gc = [g for g in segs if id(g) not in merged
+                  and g.deleted_fraction() > self.cfg.compact_deleted_fraction]
+            if not gc and not merges and not drop_empty:
+                return None
+            return CompactionPlan(self.epoch, gc, merges, drop_empty)
+
+    def execute_compaction(self, plan: CompactionPlan
+                           ) -> List[Tuple[List[SealedSegment],
+                                           Optional[SealedSegment]]]:
+        """Build every replacement segment in the plan — the expensive part,
+        run without the lock (this is what ``compact_async`` moves off the
+        ingest/query path).  Returns ``(victims, replacement)`` pairs."""
+        built: List[Tuple[List[SealedSegment], Optional[SealedSegment]]] = []
+        for seg in plan.gc:
+            built.append(([seg], seg.compacted()))
+        for grp in plan.merges:
+            built.append((grp, self._merge_group(grp)))
+        return built
+
+    def publish_compaction(self, plan: CompactionPlan,
+                           built) -> int:
+        """Atomically swap replacements into the segment list.
+
+        Operations whose victims already left the list (expired or replaced
+        by a racing round) are dropped; deletions that landed during the
+        build are re-applied to each replacement before it becomes visible.
+        Bumps ``epoch`` so cached read structures (shard packs, query
+        snapshots) refresh.  Returns the number of applied rewrite ops.
+        """
         ops = 0
-        # (1) per-segment garbage collection of lazy deletions
-        for i, seg in enumerate(self.segments):
-            if (seg.deleted_fraction() > self.cfg.compact_deleted_fraction
-                    and seg.n_live > 0):
-                self.segments[i] = seg.compacted()
-                ops += 1
-        self.segments = [g for g in self.segments if g.n_live > 0]
-        # (2) merge the adjacent pair with the fewest combined live points
-        #     until the segment count is back under the policy bound
-        while len(self.segments) > self.cfg.compact_max_segments:
-            sizes = [g.n_live for g in self.segments]
-            pair = min(range(len(sizes) - 1),
-                       key=lambda i: sizes[i] + sizes[i + 1])
-            a, b = self.segments[pair], self.segments[pair + 1]
-            merged = self._merge(a, b)
-            self.segments[pair:pair + 2] = [merged] if merged else []
-            ops += 1
+        with self._lock:
+            current = {id(g) for g in self.segments}
+            out = list(self.segments)
+            for victims, new_seg in built:
+                if any(id(v) not in current for v in victims):
+                    continue
+                if new_seg is not None:
+                    dead = new_seg.gids[~self._alive[new_seg.gids]]
+                    if len(dead):
+                        new_seg.delete(dead)
+                victim_ids = {id(v) for v in victims}
+                out = [g for g in out if id(g) not in victim_ids]
+                if new_seg is not None and new_seg.n_live > 0:
+                    out.append(new_seg)
+                ops += 1 if len(victims) == 1 else len(victims) - 1
+            out = [g for g in out if g.n_live > 0]
+            changed = ops > 0 or len(out) != len(self.segments)
+            if changed:
+                out.sort(key=lambda g: g.t_min)
+                self.segments = out
+                self.epoch += 1
         if ops:
             self.counters["compactions"] += 1
         return ops
 
-    def _merge(self, a: SealedSegment, b: SealedSegment
-               ) -> Optional[SealedSegment]:
-        keep_a = np.nonzero(a.index.valid)[0]
-        keep_b = np.nonzero(b.index.valid)[0]
-        gids = np.concatenate([a.gids[keep_a], b.gids[keep_b]])
+    def compact(self) -> int:
+        """One full synchronous compaction: plan/execute/publish rounds
+        until a plan comes back empty; returns total rewrite operations.
+        (Call :meth:`compact_async` to run this off the hot path.)"""
+        total = 0
+        for _ in range(8):          # one round in the uncontended case
+            plan = self.plan_compaction()
+            if plan is None:
+                break
+            built = self.execute_compaction(plan)
+            applied = self.publish_compaction(plan, built)
+            total += applied
+            if applied < plan.n_ops:
+                break               # racing mutations; let the next tick retry
+        return total
+
+    def compact_async(self) -> threading.Thread:
+        """Run :meth:`compact` on a daemon thread (at most one at a time);
+        returns the thread.  Queries and ingest proceed concurrently — the
+        publish step is the only part that takes the lock."""
+        with self._lock:
+            t = self._compact_thread
+            if t is not None and t.is_alive():
+                return t
+            t = threading.Thread(target=self.compact, daemon=True,
+                                 name="cubegraph-compactor")
+            self._compact_thread = t
+        t.start()
+        return t
+
+    def wait_for_compaction(self, timeout: Optional[float] = None) -> None:
+        """Block until the background compaction (if any) finishes."""
+        t = self._compact_thread
+        if t is not None:
+            t.join(timeout)
+
+    def _merge_group(self, segs: Sequence[SealedSegment]
+                     ) -> Optional[SealedSegment]:
+        """Rebuild one segment from the live points of ``segs``."""
+        xs, ss, gs = [], [], []
+        for g in segs:
+            xl, sl, gl = g.live_points()
+            xs.append(xl)
+            ss.append(sl)
+            gs.append(gl)
+        gids = np.concatenate(gs)
         if len(gids) == 0:
             return None
-        x = np.concatenate([np.asarray(a.index.x)[keep_a],
-                            np.asarray(b.index.x)[keep_b]])
-        s = np.concatenate([a.index.s_np[keep_a], b.index.s_np[keep_b]])
-        seg = SealedSegment.from_points(self._next_seg_id, x, s, gids,
-                                        self.time_dim, self.cfg.index_cfg)
-        self._next_seg_id += 1
-        return seg
+        with self._lock:
+            sid = self._next_seg_id
+            self._next_seg_id += 1
+        return SealedSegment.from_points(sid, np.concatenate(xs),
+                                         np.concatenate(ss), gids,
+                                         self.time_dim, self.cfg.index_cfg)
 
-    def maintenance(self) -> dict:
-        """One synchronous lifecycle tick: seal (if due) + expire + compact."""
+    def maintenance(self, async_compaction: bool = False) -> dict:
+        """One lifecycle tick: seal (if due) + expire + compact + store GC.
+
+        With ``async_compaction`` the compaction rounds run on the
+        background thread and this tick returns immediately (the dict then
+        reports ``compaction_ops=None``)."""
         sealed = self.maybe_seal() is not None
         expired = self.expire()
-        compactions = self.compact()
+        if async_compaction:
+            self.compact_async()
+            compactions = None
+        else:
+            compactions = self.compact()
+        freed = self.gc_store()
         return {"sealed": sealed, "expired_points": expired,
-                "compaction_ops": compactions}
+                "compaction_ops": compactions, "store_gc_points": freed}
 
     # ------------------------------------------------------------------
     # Read path (fan-out lives in streaming/query.py)
     # ------------------------------------------------------------------
+    def snapshot(self) -> Tuple[int, List[SealedSegment]]:
+        """(epoch, segment list copy) — the consistent view a query runs
+        against while compaction publishes concurrently."""
+        with self._lock:
+            return self.epoch, list(self.segments)
+
+    def shard_pack(self, epoch: int, segments: List[SealedSegment]):
+        """The cached shard pack for ``(epoch, segments)``, rebuilding it if
+        the segment list has moved on since the cached generation.
+
+        The build runs outside the lock (it copies live points and uploads
+        device arrays); installation re-checks the epoch and syncs the pack
+        against deletions that landed mid-build.
+        """
+        pack = self._pack
+        if pack is not None and pack.epoch == epoch:
+            return pack
+        from ..distributed.segment_shards import (SegmentShardSource,
+                                                  build_shard_pack)
+        sources = []
+        for seg in segments:
+            xl, sl, gl = seg.live_points()
+            if len(gl) == 0:
+                continue
+            sources.append(SegmentShardSource(seg.seg_id, xl, sl, gl,
+                                              seg.t_min, seg.t_max))
+        if not sources:
+            return None
+        pack = build_shard_pack(sources, self.cfg.n_shards, epoch,
+                                mesh=self.shard_mesh)
+        with self._lock:
+            pack.sync_alive(self.alive)
+            if self.epoch == epoch:
+                self._pack = pack
+        return pack
+
     def query(self, queries: np.ndarray, filt: Optional[Filter], k: int = 10,
               ef: int = 64, return_stats: bool = False, **kw):
+        """Unified fan-out query over the delta buffer + sealed segments;
+        see :func:`repro.streaming.query.query_segments`."""
         from .query import query_segments
         return query_segments(self, queries, filt, k=k, ef=ef,
                               return_stats=return_stats, **kw)
 
     def stats(self) -> dict:
-        return {
-            "n_total": self.n_total,
-            "n_live": self.n_live,
-            "delta_live": self.delta.n_live,
-            "n_segments": len(self.segments),
-            "segment_live": [g.n_live for g in self.segments],
-            "segment_spans": [(g.t_min, g.t_max) for g in self.segments],
-            "now": self.now,
-            **self.counters,
-        }
+        """Lifecycle counters and per-segment occupancy for dashboards."""
+        with self._lock:
+            return {
+                "n_total": self.n_total,
+                "n_live": self.n_live,
+                "delta_live": self.delta.n_live,
+                "n_segments": len(self.segments),
+                "segment_live": [g.n_live for g in self.segments],
+                "segment_spans": [(g.t_min, g.t_max) for g in self.segments],
+                "now": self.now,
+                "epoch": self.epoch,
+                "n_shards": self.cfg.n_shards,
+                "store_resident_points": self.store.resident_points,
+                "store_nbytes": self.store.nbytes,
+                **self.counters,
+            }

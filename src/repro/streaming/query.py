@@ -3,25 +3,32 @@
 Planning prunes segments whose ``[t_min, t_max]`` span misses the filter's
 temporal bounds (extracted from its bounding box — half-open
 ``IntervalFilter`` windows work directly).  The query then fans out to the
-delta buffer (exact fused-kernel scan) and each surviving sealed segment
-(stitched-graph beam search), and the per-segment top-k candidate lists are
-merged with an exact re-rank through ``topk_over_candidates`` against the
-manager's global point store — so merged distances are consistent no matter
-which segment a candidate came from.
+delta buffer (exact fused-kernel scan) and the sealed segments — either one
+stitched-graph beam search per segment (default) or, with
+``StreamConfig.n_shards >= 1``, one jitted dispatch of the fused kernel
+over every segment × shard of the manager's shard pack, distributed across
+a device mesh when one is attached.
+
+Merging is a direct exact merge of the per-segment ``(gid, dist)`` pairs:
+every path reports the same fp32 distance for the same point and global ids
+are disjoint across the delta buffer and segments, so concatenating the
+candidate lists and taking the global top-k needs no re-rank — the global
+point store stays off the hot path entirely.  The merged result is finally
+filtered through the manager's liveness bitmap, which is what makes query
+results immune to racing deletions/compactions (see the epoch guarantee in
+``repro.streaming.manager``).
 """
 from __future__ import annotations
 
 import time
 from typing import List, Optional, Tuple
 
-import jax.numpy as jnp
 import numpy as np
 
 from ..core import Filter
-from ..core.graph import squared_norms, topk_over_candidates
 from .segments import SegmentQueryStats
 
-__all__ = ["temporal_bounds", "query_segments"]
+__all__ = ["merge_topk", "temporal_bounds", "query_segments"]
 
 
 def temporal_bounds(filt: Optional[Filter], time_dim: int
@@ -35,73 +42,126 @@ def temporal_bounds(filt: Optional[Filter], time_dim: int
     return float(lo[time_dim]), float(hi[time_dim])
 
 
-def _store_arrays(manager):
-    """Cached jnp views of the global point store (re-cut when it grows)."""
-    cache = getattr(manager, "_store_cache", None)
-    if cache is not None and cache[0] == manager.n_total:
-        return cache[1], cache[2]
-    x = jnp.asarray(manager.store_x)
-    norms = squared_norms(x)
-    manager._store_cache = (manager.n_total, x, norms)
-    return x, norms
+def merge_topk(blocks_g: List[np.ndarray], blocks_d: List[np.ndarray],
+               k: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Exact top-k merge of per-segment ``(gid, dist)`` candidate blocks.
+
+    Blocks are ``[b, k_i]`` with ``-1`` id padding; distances are
+    comparable across blocks (same metric over the same vectors), and gids
+    are disjoint across blocks, so a stable sort of the concatenation is
+    the exact global answer.  Returns ``(gids [b, k], dists [b, k])``.
+    """
+    g = np.concatenate(blocks_g, axis=1)
+    d = np.concatenate(blocks_d, axis=1).astype(np.float32)
+    d = np.where(g >= 0, d, np.inf)
+    order = np.argsort(d, axis=1, kind="stable")[:, :k]
+    out_g = np.take_along_axis(g, order, axis=1)
+    out_d = np.take_along_axis(d, order, axis=1)
+    out_g = np.where(np.isfinite(out_d), out_g, -1)
+    b = g.shape[0]
+    if out_g.shape[1] < k:
+        pad = k - out_g.shape[1]
+        out_g = np.concatenate(
+            [out_g, np.full((b, pad), -1, out_g.dtype)], axis=1)
+        out_d = np.concatenate(
+            [out_d, np.full((b, pad), np.inf, np.float32)], axis=1)
+    return out_g.astype(np.int64), out_d
+
+
+def _alive_filter(manager, gids: np.ndarray, dists: np.ndarray
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    """Drop merged candidates whose gid has since been deleted/expired,
+    keeping each row's order and -1/inf padding."""
+    ok = gids >= 0
+    ok[ok] = manager.alive[gids[ok]]
+    if ok.all():
+        return gids, dists
+    order = np.argsort(~ok, axis=1, kind="stable")
+    gids = np.take_along_axis(np.where(ok, gids, -1), order, axis=1)
+    dists = np.take_along_axis(np.where(ok, dists, np.inf), order, axis=1)
+    return gids, dists
 
 
 def query_segments(manager, queries: np.ndarray, filt: Optional[Filter],
                    k: int = 10, ef: int = 64, return_stats: bool = False,
-                   **search_kw):
+                   use_shards: Optional[bool] = None, **search_kw):
     """Fan out one query batch across all live segments and merge top-k.
 
-    Returns ``(gids [b, k], dists [b, k])`` — plus a list of per-segment
+    Runs against a ``manager.snapshot()`` taken at entry, so concurrent
+    compaction publishes never tear the segment list mid-query.  Returns
+    ``(gids [b, k], dists [b, k])`` — plus a list of per-segment
     ``SegmentQueryStats`` when ``return_stats`` is set (pruned segments
-    appear with ``pruned=True`` and zero search time).
+    appear with ``pruned=True`` and zero search time; under the sharded
+    path every searched segment reports the shared dispatch time).
+
+    ``use_shards`` overrides ``StreamConfig.n_shards`` per call (True
+    forces the sharded kernel scan, False the per-segment graph search).
     """
     queries = np.atleast_2d(np.asarray(queries, np.float32))
     b = queries.shape[0]
     t_lo, t_hi = temporal_bounds(filt, manager.time_dim)
     metric = manager.cfg.index_cfg.metric
+    epoch, segments = manager.snapshot()
 
-    blocks_i: List[np.ndarray] = []
+    blocks_g: List[np.ndarray] = []
+    blocks_d: List[np.ndarray] = []
     stats: List[SegmentQueryStats] = []
 
     if manager.delta.n_live > 0:
         st = manager.delta.stats()
         if manager.delta.t_max >= t_lo and manager.delta.t_min <= t_hi:
             t0 = time.perf_counter()
-            ids, _ = manager.delta.query(queries, filt, k, metric=metric)
+            ids, dd = manager.delta.query(queries, filt, k, metric=metric)
             st.search_ms = (time.perf_counter() - t0) * 1e3
-            blocks_i.append(ids)
+            blocks_g.append(ids)
+            blocks_d.append(dd)
         else:
             st.pruned = True
         stats.append(st)
 
-    for seg in manager.segments:
-        st = seg.stats()
-        if seg.n_live == 0 or not seg.overlaps(t_lo, t_hi):
-            st.pruned = True
+    sharded = (manager.cfg.n_shards >= 1 if use_shards is None
+               else bool(use_shards))
+    live_segs = [g for g in segments if g.n_live > 0]
+    if sharded and live_segs:
+        from ..distributed.segment_shards import pack_search
+        # None when every snapshot segment lost its last live point to a
+        # racing delete — nothing sealed to search, fall through.
+        pack = manager.shard_pack(epoch, live_segs)
+        dt_ms = 0.0
+        if pack is not None:
+            t0 = time.perf_counter()
+            gg, dd = pack_search(pack, queries, filt, k, t_lo=t_lo,
+                                 t_hi=t_hi, metric=metric)
+            dt_ms = (time.perf_counter() - t0) * 1e3
+            blocks_g.append(gg)
+            blocks_d.append(dd)
+        for seg in segments:
+            st = seg.stats()
+            if pack is None or seg.n_live == 0 \
+                    or not seg.overlaps(t_lo, t_hi):
+                st.pruned = True
+            else:
+                st.search_ms = dt_ms
             stats.append(st)
-            continue
-        t0 = time.perf_counter()
-        ids, _ = seg.query(queries, filt, k=k, ef=ef, **search_kw)
-        st.search_ms = (time.perf_counter() - t0) * 1e3
-        blocks_i.append(ids)
-        stats.append(st)
+    else:
+        for seg in segments:
+            st = seg.stats()
+            if seg.n_live == 0 or not seg.overlaps(t_lo, t_hi):
+                st.pruned = True
+                stats.append(st)
+                continue
+            t0 = time.perf_counter()
+            ids, dd = seg.query(queries, filt, k=k, ef=ef, **search_kw)
+            st.search_ms = (time.perf_counter() - t0) * 1e3
+            blocks_g.append(ids)
+            blocks_d.append(np.asarray(dd))
+            stats.append(st)
 
-    if not blocks_i:
-        out_i = np.full((b, k), -1, np.int64)
+    if not blocks_g:
+        out_g = np.full((b, k), -1, np.int64)
         out_d = np.full((b, k), np.inf, np.float32)
-        return (out_i, out_d, stats) if return_stats else (out_i, out_d)
+        return (out_g, out_d, stats) if return_stats else (out_g, out_d)
 
-    # Exact merge: global ids are disjoint across segments, so concatenate
-    # the candidate lists and re-rank against the global store.
-    cand = np.concatenate(blocks_i, axis=1)
-    x_all, norms = _store_arrays(manager)
-    ids, dd = topk_over_candidates(queries, cand.astype(np.int32), x_all,
-                                   norms, min(k, cand.shape[1]),
-                                   metric=metric)
-    ids = np.asarray(ids)
-    dd = np.asarray(dd, np.float32)
-    out_i = np.full((b, k), -1, np.int64)
-    out_d = np.full((b, k), np.inf, np.float32)
-    out_i[:, : ids.shape[1]] = ids
-    out_d[:, : ids.shape[1]] = dd
-    return (out_i, out_d, stats) if return_stats else (out_i, out_d)
+    out_g, out_d = merge_topk(blocks_g, blocks_d, k)
+    out_g, out_d = _alive_filter(manager, out_g, out_d)
+    return (out_g, out_d, stats) if return_stats else (out_g, out_d)

@@ -11,14 +11,14 @@ results from any mix of segments merge directly.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
 from ..core import CubeGraphConfig, CubeGraphIndex, Filter
 from ..kernels import filtered_topk
 
-__all__ = ["DeltaBuffer", "SealedSegment", "SegmentQueryStats"]
+__all__ = ["DeltaBuffer", "PointStore", "SealedSegment", "SegmentQueryStats"]
 
 
 def grow_rows(need: int, *pairs):
@@ -36,6 +36,96 @@ def grow_rows(need: int, *pairs):
         np.concatenate([a, np.full((cap - len(a),) + a.shape[1:], fill,
                                    a.dtype)])
         for a, fill in pairs)
+
+
+class PointStore:
+    """Chunked append-only (vector, metadata) ledger keyed by global id.
+
+    Since PR 2 the unified query path merges per-segment ``(gid, dist)``
+    pairs directly, so this ledger is *off* the query hot path: it only
+    serves point lookups (debugging, serving-side hydration) and is
+    garbage-collectable.  Rows live in fixed-size chunks; :meth:`gc` frees
+    every chunk whose ids are all dead (deleted or expired), which is the
+    common case because gids are ingestion-ordered and retention drops
+    whole time ranges.
+    """
+
+    def __init__(self, d: int, m: int, chunk: int = 4096):
+        self.d = int(d)
+        self.m = int(m)
+        self.chunk = max(int(chunk), 16)
+        self._chunks: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        self.n_total = 0                 # ids handed out so far
+
+    def append(self, x: np.ndarray, s: np.ndarray) -> np.ndarray:
+        """Append a batch of rows; returns their (sequential) global ids."""
+        x = np.atleast_2d(np.asarray(x, np.float32))
+        s = np.atleast_2d(np.asarray(s, np.float64))
+        n_add = x.shape[0]
+        gids = np.arange(self.n_total, self.n_total + n_add, dtype=np.int64)
+        lo = 0
+        while lo < n_add:
+            gid = int(gids[lo])
+            ci, off = divmod(gid, self.chunk)
+            if ci not in self._chunks:
+                self._chunks[ci] = (np.zeros((self.chunk, self.d), np.float32),
+                                    np.zeros((self.chunk, self.m), np.float64))
+            take = min(self.chunk - off, n_add - lo)
+            cx, cs = self._chunks[ci]
+            cx[off:off + take] = x[lo:lo + take]
+            cs[off:off + take] = s[lo:lo + take]
+            lo += take
+        self.n_total += n_add
+        return gids
+
+    def get(self, gids: Sequence[int]
+            ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Rows by global id -> ``(x, s, present)``; ``present`` is False
+        (and the row zero) for ids whose chunk has been freed."""
+        g = np.asarray(gids, np.int64)
+        x = np.zeros((len(g), self.d), np.float32)
+        s = np.zeros((len(g), self.m), np.float64)
+        present = np.zeros(len(g), bool)
+        ci_of = g // self.chunk
+        for ci in np.unique(ci_of):
+            if int(ci) not in self._chunks:
+                continue
+            sel = np.nonzero(ci_of == ci)[0]
+            cx, cs = self._chunks[int(ci)]
+            off = g[sel] - ci * self.chunk
+            x[sel] = cx[off]
+            s[sel] = cs[off]
+            present[sel] = True
+        return x, s, present
+
+    def gc(self, alive: np.ndarray) -> int:
+        """Free every chunk with no live id left; returns #rows freed.
+
+        ``alive`` is the manager's per-gid liveness mask (length
+        ``n_total``).  Freeing is whole-chunk (O(1) per chunk, no copying),
+        mirroring the segment-granular retention design.
+        """
+        freed = 0
+        for ci in list(self._chunks):
+            lo = ci * self.chunk
+            hi = min(lo + self.chunk, self.n_total)
+            if hi <= lo or not alive[lo:hi].any():
+                freed += max(hi - lo, 0)
+                del self._chunks[ci]
+        return freed
+
+    @property
+    def resident_points(self) -> int:
+        """Rows currently backed by an allocated chunk."""
+        out = 0
+        for ci in self._chunks:
+            out += min(self.chunk, self.n_total - ci * self.chunk)
+        return out
+
+    @property
+    def nbytes(self) -> int:
+        """Host bytes held by resident chunks."""
+        return sum(cx.nbytes + cs.nbytes for cx, cs in self._chunks.values())
 
 
 @dataclasses.dataclass
@@ -77,9 +167,11 @@ class DeltaBuffer:
 
     @property
     def n_live(self) -> int:
+        """Rows appended and not yet deleted/expired."""
         return int(self.valid[: self.size].sum())
 
     def append(self, x: np.ndarray, s: np.ndarray, gids: np.ndarray) -> None:
+        """Append rows (vectors, metadata, their global ids) to the tail."""
         x = np.asarray(x, np.float32)
         s = np.asarray(s, np.float64)
         n_add = x.shape[0]
@@ -105,14 +197,15 @@ class DeltaBuffer:
         self.valid[: self.size][hit] = False
         return int(hit.sum())
 
-    def expire_before(self, cutoff: float) -> int:
-        """Invalidate live rows with timestamp < cutoff; returns #expired."""
+    def expire_before(self, cutoff: float) -> np.ndarray:
+        """Invalidate live rows with timestamp < cutoff; returns their
+        global ids (so the caller can retire them in its liveness ledger)."""
         if self.size == 0:
-            return 0
+            return np.empty(0, np.int64)
         old = self.valid[: self.size] & (self.s[: self.size, self.time_dim]
                                          < cutoff)
         self.valid[: self.size][old] = False
-        return int(old.sum())
+        return self.gids[: self.size][old].copy()
 
     def live_points(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """(x, s, gids) of live rows — copied, safe to hand to a builder."""
@@ -121,6 +214,7 @@ class DeltaBuffer:
                 self.gids[keep].copy())
 
     def reset(self) -> None:
+        """Empty the buffer (after its live points were sealed away)."""
         self.valid[: self.size] = False
         self.size = 0
         self.t_min = np.inf
@@ -146,6 +240,7 @@ class DeltaBuffer:
         return out_i, out_d
 
     def stats(self, segment_id: int = -1) -> SegmentQueryStats:
+        """Fresh per-query accounting row for this buffer."""
         return SegmentQueryStats(segment_id=segment_id, kind="delta",
                                  n_live=self.n_live, t_min=self.t_min,
                                  t_max=self.t_max)
@@ -176,23 +271,35 @@ class SealedSegment:
     def from_points(cls, seg_id: int, x: np.ndarray, s: np.ndarray,
                     gids: np.ndarray, time_dim: int,
                     cfg: CubeGraphConfig) -> "SealedSegment":
+        """Build the segment's CubeGraphIndex over the given points."""
         index = CubeGraphIndex.build(np.asarray(x, np.float32),
                                      np.asarray(s, np.float64), cfg)
         return cls(seg_id, index, gids, time_dim)
 
     @property
     def n(self) -> int:
+        """Total rows in the segment (live + lazily deleted)."""
         return self.index.n
 
     @property
     def n_live(self) -> int:
+        """Rows not yet deleted."""
         return int(self.index.valid.sum())
 
     def deleted_fraction(self) -> float:
+        """Fraction of this segment's rows lazily deleted so far."""
         return self.index.deleted_fraction()
 
     def overlaps(self, t_lo: float, t_hi: float) -> bool:
+        """Whether this segment's time span intersects ``[t_lo, t_hi]``."""
         return self.t_max >= t_lo and self.t_min <= t_hi
+
+    def live_points(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(x, s, gids) of live rows — inputs for sharding or a merge
+        rebuild.  ``x``/``s`` are fresh host copies; safe to hand off."""
+        keep = np.nonzero(self.index.valid)[0]
+        return (np.asarray(self.index.x)[keep], self.index.s_np[keep],
+                self.gids[keep])
 
     def locate(self, gids: Sequence[int]) -> np.ndarray:
         """Global ids -> local ids (-1 where not in this segment)."""
@@ -203,6 +310,7 @@ class SealedSegment:
         return np.where(ok, self._order[pos_c], -1)
 
     def delete(self, gids: Sequence[int]) -> int:
+        """Lazy-delete by global id; returns the number present here."""
         local = self.locate(gids)
         local = local[local >= 0]
         if len(local):
@@ -232,6 +340,7 @@ class SealedSegment:
         return gids, np.asarray(dd, np.float32)
 
     def stats(self) -> SegmentQueryStats:
+        """Fresh per-query accounting row for this segment."""
         return SegmentQueryStats(segment_id=self.seg_id, kind="sealed",
                                  n_live=self.n_live, t_min=self.t_min,
                                  t_max=self.t_max)

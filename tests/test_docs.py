@@ -1,0 +1,22 @@
+"""Docs-consistency gate (same checks CI runs via tools/check_docs.py)."""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                       / "tools"))
+import check_docs  # noqa: E402
+
+
+def test_every_benchmark_is_documented():
+    """docs/benchmarks.md must mention every benchmarks/bench_*.py."""
+    assert check_docs.check_bench_docs() == []
+
+
+def test_readme_links_docs():
+    """README must link docs/architecture.md and docs/benchmarks.md."""
+    assert check_docs.check_readme_links() == []
+
+
+def test_streaming_and_distributed_docstrings():
+    """Docstring lint over src/repro/streaming and src/repro/distributed."""
+    assert check_docs.check_docstrings() == []

@@ -27,8 +27,9 @@ from repro.configs.shapes import ShapeSpec
 from repro.launch.dryrun import build_cell, compile_cell
 from repro.distributed import hints
 
+from repro.launch.mesh import mesh_compat_kwargs
 mesh = Mesh(np.asarray(jax.devices()).reshape(2, 4), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+            **mesh_compat_kwargs(2))
 
 out = {}
 for arch in %(archs)s:

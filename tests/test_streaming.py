@@ -180,6 +180,81 @@ def test_interval_on_middle_dim_plans_correctly():
     assert recall(ids, gt_mid) >= 0.9
 
 
+def test_concurrent_compaction_never_returns_stale_points():
+    """Acceptance: queries racing a background compaction never return a
+    point that was deleted (or expired) before the query began — the
+    snapshot + publish epoch guard plus the final liveness filter."""
+    import threading
+    cfg = StreamConfig(time_dim=2, seal_max_points=250,
+                       compact_max_segments=2, compact_deleted_fraction=0.2,
+                       index_cfg=IDX_CFG)
+    x, s = _timed_dataset(2000)
+    mgr = SegmentManager(24, 3, cfg)
+    mgr.ingest(x, s)
+    rng = np.random.default_rng(9)
+    dead = rng.choice(2000, size=700, replace=False)
+    mgr.delete(dead)
+    dead_set = set(dead.tolist())
+    q = _queries(x)
+
+    t = mgr.compact_async()
+    assert t is mgr.compact_async()       # at most one compactor at a time
+    violations = []
+    stop = threading.Event()
+
+    def hammer():
+        while not stop.is_set():
+            ids, _ = mgr.query(q, None, k=10, ef=64)
+            got = ids[ids >= 0]
+            if set(got.tolist()) & dead_set or (~mgr.alive[got]).any():
+                violations.append(got)
+
+    workers = [threading.Thread(target=hammer) for _ in range(2)]
+    for w in workers:
+        w.start()
+    mgr.wait_for_compaction()
+    stop.set()
+    for w in workers:
+        w.join()
+    assert not violations
+    assert len(mgr.segments) <= cfg.compact_max_segments
+    # post-compaction results still correct
+    gt, _ = ground_truth(x, s, q, None, 10, valid=mgr.alive)
+    ids, _ = mgr.query(q, None, k=10, ef=128)
+    assert recall(ids, gt) >= 0.9
+
+
+def test_point_store_gc_frees_retired_gids():
+    """Acceptance: after TTL expiry + deletes, the chunked point store
+    releases the chunks whose gids all retired; live lookups still work."""
+    cfg = StreamConfig(time_dim=2, seal_max_points=400, ttl=0.45,
+                       store_chunk=256, index_cfg=IDX_CFG)
+    x, s = _timed_dataset(2000)
+    mgr = SegmentManager(24, 3, cfg)
+    mgr.ingest(x, s)
+    assert mgr.store.resident_points == 2000
+    bytes_before = mgr.store.nbytes
+    mgr.expire()
+    freed = mgr.gc_store()
+    assert freed > 0 and freed % cfg.store_chunk == 0
+    assert mgr.store.resident_points == 2000 - freed
+    assert mgr.store.nbytes < bytes_before
+    # retired ids are gone from the ledger; live ids still resolve
+    dead_gid, live_gid = 0, 1999
+    assert not mgr.alive[dead_gid] and mgr.alive[live_gid]
+    xx, ss_, present = mgr.get_points([dead_gid, live_gid])
+    assert not present[0] and present[1]
+    assert np.allclose(xx[1], x[live_gid])
+    # GC'd history never resurfaces in queries
+    ids, _ = mgr.query(_queries(x), None, k=10, ef=96)
+    got = ids[ids >= 0]
+    assert mgr.alive[got].all()
+    # a full maintenance tick (the serving-loop entry point) reports GC too
+    out = mgr.maintenance()
+    assert set(out) >= {"sealed", "expired_points", "compaction_ops",
+                        "store_gc_points"}
+
+
 def test_streaming_document_store_and_batcher():
     """Serving wiring: streaming DocumentStore ingest + grouped fan-out."""
     from repro.serving.batching import RetrievalBatcher, RetrievalRequest
@@ -219,3 +294,13 @@ def test_streaming_document_store_and_batcher():
     out2 = store.retrieve(x[:4], f_all, k=5)
     assert all(d.doc_id >= 100 for row in out2 for d in row)
     assert isinstance(store.maintenance(), dict)
+    # off-path compaction through the serving wiring: the tick returns
+    # immediately (compaction_ops unknown) and the batcher can drive it
+    out3 = store.maintenance(async_compaction=True)
+    assert out3["compaction_ops"] is None
+    store.manager.wait_for_compaction()
+    batcher2 = RetrievalBatcher(store, ef=96, maintenance_every=1)
+    batcher2.submit(RetrievalRequest(req_id=99, query_emb=x[200], filt=f_all,
+                                     k=3))
+    assert 99 in batcher2.flush()
+    store.manager.wait_for_compaction()

@@ -1,0 +1,96 @@
+#!/usr/bin/env python3
+"""Docs-consistency gate (run by CI and by ``tests/test_docs.py``).
+
+Three checks, no third-party dependencies:
+
+1. every ``benchmarks/bench_*.py`` experiment is documented in
+   ``docs/benchmarks.md`` (mentioned by file name);
+2. ``README.md`` links both ``docs/architecture.md`` and
+   ``docs/benchmarks.md``;
+3. docstring lint over ``src/repro/streaming`` and
+   ``src/repro/distributed``: every module, public class, and public
+   function/method carries a docstring (AST-based, pydocstyle's
+   D100/D101/D102/D103 subset).
+
+Exit code 0 when clean; prints one line per violation otherwise.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+LINT_DIRS = ("src/repro/streaming", "src/repro/distributed")
+
+
+def check_bench_docs() -> list:
+    """Each bench_*.py must appear (by name) in docs/benchmarks.md."""
+    doc_path = REPO / "docs" / "benchmarks.md"
+    if not doc_path.exists():
+        return ["docs/benchmarks.md is missing"]
+    doc = doc_path.read_text()
+    errors = []
+    for bench in sorted((REPO / "benchmarks").glob("bench_*.py")):
+        if bench.name not in doc:
+            errors.append(f"docs/benchmarks.md does not mention {bench.name}")
+    return errors
+
+
+def check_readme_links() -> list:
+    """README must link the architecture and benchmarks docs."""
+    readme = (REPO / "README.md").read_text()
+    errors = []
+    for target in ("docs/architecture.md", "docs/benchmarks.md"):
+        if not (REPO / target).exists():
+            errors.append(f"{target} is missing")
+        if target not in readme:
+            errors.append(f"README.md does not link {target}")
+    return errors
+
+
+def _lint_node(node, path, errors, prefix=""):
+    """Recurse over public defs collecting missing-docstring violations."""
+    for child in getattr(node, "body", []):
+        if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.ClassDef)):
+            name = child.name
+            if name.startswith("_"):
+                continue                     # private / dunder: exempt
+            if ast.get_docstring(child) is None:
+                kind = ("class" if isinstance(child, ast.ClassDef)
+                        else "function")
+                errors.append(
+                    f"{path}:{child.lineno} public {kind} "
+                    f"{prefix}{name} has no docstring")
+            if isinstance(child, ast.ClassDef):
+                _lint_node(child, path, errors, prefix=f"{name}.")
+
+
+def check_docstrings() -> list:
+    """AST docstring lint over the directories named in LINT_DIRS."""
+    errors = []
+    for d in LINT_DIRS:
+        for py in sorted((REPO / d).rglob("*.py")):
+            rel = py.relative_to(REPO)
+            tree = ast.parse(py.read_text())
+            if ast.get_docstring(tree) is None:
+                errors.append(f"{rel}:1 module has no docstring")
+            _lint_node(tree, rel, errors)
+    return errors
+
+
+def main() -> int:
+    """Run all checks; print violations; return a process exit code."""
+    errors = check_bench_docs() + check_readme_links() + check_docstrings()
+    for e in errors:
+        print(f"docs-check: {e}")
+    if errors:
+        print(f"docs-check: {len(errors)} violation(s)")
+        return 1
+    print("docs-check: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
