@@ -1,0 +1,87 @@
+"""Exp-11: durable streaming snapshots — snapshot/restore latency vs
+segment count, plus restored-replica query parity.
+
+Measures, per segment count:
+  * cold ``snapshot_to`` (every segment artifact written) and warm
+    re-snapshot (artifacts reused, only state + manifest rewritten)
+  * ``SegmentManager.restore`` wall time (manifest + mmapped artifacts +
+    WAL-tail replay) — the replica warm-start cost
+  * first-query latency on the restored manager vs the live one, and a
+    bit-for-bit parity check on the results (the persistence acceptance
+    property, here measured rather than asserted)
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import CubeGraphConfig
+from repro.streaming import SegmentManager, StreamConfig
+
+from .common import BENCH_D, BENCH_N, BENCH_Q, csv_row, record
+
+CFG = CubeGraphConfig(n_layers=3, m_intra=12, m_cross=4)
+
+
+def _build_manager(n: int, n_segments: int) -> SegmentManager:
+    x, s = (np.random.default_rng(61).normal(
+        size=(n, BENCH_D)).astype(np.float32),
+        np.random.default_rng(62).uniform(size=(n, 3)))
+    s[:, 2] = np.arange(n) / n
+    mgr = SegmentManager(BENCH_D, 3, StreamConfig(
+        time_dim=2, seal_max_points=max(n // n_segments, 64),
+        compact_max_segments=4 * n_segments, index_cfg=CFG))
+    mgr.ingest(x, s)
+    return mgr
+
+
+def run():
+    """Benchmark snapshot/restore across segment counts (exp11)."""
+    n = max(BENCH_N // 2, 2000)
+    rng = np.random.default_rng(63)
+    q = rng.normal(size=(BENCH_Q, BENCH_D)).astype(np.float32)
+    out = {"n_points": n, "rows": []}
+    for n_segments in (2, 4, 8, 16):
+        mgr = _build_manager(n, n_segments)
+        root = tempfile.mkdtemp(prefix="cg-bench-persist-")
+        try:
+            t0 = time.perf_counter()
+            mgr.snapshot_to(root)
+            cold_s = time.perf_counter() - t0
+            mgr.delete(rng.integers(0, n, size=n // 50))
+            t0 = time.perf_counter()
+            mgr.snapshot_to(root)             # artifacts reused
+            warm_s = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            restored = SegmentManager.restore(root, resume=False)
+            restore_s = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            g_r, d_r = restored.query(q, None, k=10, ef=64)
+            first_query_s = time.perf_counter() - t0
+            g_l, d_l = mgr.query(q, None, k=10, ef=64)
+            snapshot_bytes = sum(
+                os.path.getsize(os.path.join(dirpath, f))
+                for dirpath, _, files in os.walk(root) for f in files)
+            row = {
+                "n_segments": len(mgr.segments),
+                "cold_snapshot_ms": round(cold_s * 1e3, 2),
+                "warm_snapshot_ms": round(warm_s * 1e3, 2),
+                "restore_ms": round(restore_s * 1e3, 2),
+                "restored_first_query_ms": round(first_query_s * 1e3, 2),
+                "snapshot_MB": round(snapshot_bytes / 1e6, 2),
+                "bit_identical": bool(np.array_equal(g_l, g_r)
+                                      and np.array_equal(d_l, d_r)),
+            }
+            out["rows"].append(row)
+            csv_row(f"exp11/segments_{row['n_segments']}",
+                    restore_s * 1e6,
+                    f"cold_ms={row['cold_snapshot_ms']};"
+                    f"warm_ms={row['warm_snapshot_ms']};"
+                    f"identical={row['bit_identical']}")
+        finally:
+            shutil.rmtree(root, ignore_errors=True)
+    record("exp11_persistence", out)

@@ -11,8 +11,8 @@ def main() -> None:
     from . import (bench_aspect_ratio, bench_distributions,
                    bench_filter_shapes, bench_index_cost, bench_kernels,
                    bench_merge_count, bench_merge_strategy, bench_multidim,
-                   bench_scalability, bench_search, bench_streaming,
-                   bench_updates)
+                   bench_persistence, bench_scalability, bench_search,
+                   bench_streaming, bench_updates)
     from .common import flush_results
 
     sections = [
@@ -26,6 +26,7 @@ def main() -> None:
         ("exp8_distributions", bench_distributions.run),
         ("exp9_streaming", bench_streaming.run),
         ("exp10_sharded_mesh", bench_streaming.run_sharded),
+        ("exp11_persistence", bench_persistence.run),
         ("a5_aspect_ratio", bench_aspect_ratio.run),
         ("a6_merge_strategy", bench_merge_strategy.run),
         ("kernels", bench_kernels.run),

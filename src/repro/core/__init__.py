@@ -4,7 +4,8 @@ Hierarchical-grid stitched-graph index for hybrid AKNN queries with
 arbitrary spatio-temporal filters (boxes, balls, polygons, compositions),
 plus the paper's baselines (PostFiltering / PreFiltering / ACORN / TreeGraph).
 """
-from .cubegraph import CubeGraphConfig, CubeGraphIndex
+from .cubegraph import (CubeGraphConfig, CubeGraphIndex, load_index,
+                        load_index_extras, save_index)
 from .filters import (BallFilter, BoxFilter, ComposeFilter, Filter,
                       IntervalFilter, PolygonFilter)
 from .grid import GridSpec, Layer
@@ -15,4 +16,5 @@ __all__ = [
     "BallFilter", "BoxFilter", "ComposeFilter", "Filter", "IntervalFilter",
     "PolygonFilter",
     "GridSpec", "Layer", "SearchParams", "beam_search",
+    "load_index", "load_index_extras", "save_index",
 ]

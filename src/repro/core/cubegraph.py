@@ -338,14 +338,29 @@ class CubeGraphIndex:
 # ---------------------------------------------------------------------------
 # Persistence (production serving: build offline, load in serving replicas)
 # ---------------------------------------------------------------------------
-def save_index(idx: CubeGraphIndex, directory: str) -> None:
-    """Serialize the full index (vectors, metadata, per-layer graphs)."""
+def save_index(idx: CubeGraphIndex, directory: str,
+               extra_arrays: Optional[dict] = None,
+               extra_meta: Optional[dict] = None) -> None:
+    """Serialize the full index (vectors, metadata, per-layer graphs).
+
+    The big point arrays (``x``, ``s``, ``valid``) are written as standalone
+    ``.npy`` files so replicas can warm-start them with
+    ``np.load(mmap_mode="r")``; the (compressible) graph arrays go into one
+    ``arrays.npz``.  ``extra_arrays`` / ``extra_meta`` let callers attach
+    artifact-level payloads (the streaming layer stores per-segment gid
+    maps, time ranges, and segment ids this way): each extra array lands in
+    ``<name>.npy`` and ``extra_meta`` round-trips through ``meta.json``.
+    """
     import json
     import os
     os.makedirs(directory, exist_ok=True)
+    np.save(os.path.join(directory, "x.npy"), np.asarray(idx.x))
+    np.save(os.path.join(directory, "s.npy"), idx.s_np)
+    np.save(os.path.join(directory, "valid.npy"), idx.valid)
+    for name, arr in (extra_arrays or {}).items():
+        np.save(os.path.join(directory, f"{name}.npy"), np.asarray(arr))
     np.savez_compressed(
         os.path.join(directory, "arrays.npz"),
-        x=np.asarray(idx.x), s=idx.s_np, valid=idx.valid,
         **{f"l{i}_nbrs": np.asarray(lg.nbrs) for i, lg in enumerate(idx.layers)},
         **{f"l{i}_xnbrs": np.asarray(lg.xnbrs) for i, lg in enumerate(idx.layers)},
         **{f"l{i}_cube_of": lg.cube_of for i, lg in enumerate(idx.layers)},
@@ -357,32 +372,72 @@ def save_index(idx: CubeGraphIndex, directory: str) -> None:
     meta = {"cfg": dataclasses.asdict(idx.cfg), "n_layers": len(idx.layers),
             "grid": {"lo": idx.grid.lo.tolist(), "hi": idx.grid.hi.tolist(),
                      "n_layers": idx.grid.n_layers},
-            "levels": [lg.level for lg in idx.layers]}
+            "levels": [lg.level for lg in idx.layers],
+            "extra": dict(extra_meta or {})}
     with open(os.path.join(directory, "meta.json"), "w") as f:
         json.dump(meta, f)
 
 
-def load_index(directory: str) -> CubeGraphIndex:
+def load_index(directory: str, mmap_mode: Optional[str] = None
+               ) -> CubeGraphIndex:
+    """Deserialize an index saved by :func:`save_index`.
+
+    Every array pulled from ``arrays.npz`` is materialized *inside* the
+    ``np.load`` context, so nothing the returned index holds aliases the
+    (closed) archive handle — the index stays queryable after the on-disk
+    artifact is deleted.  ``mmap_mode`` (e.g. ``"r"``) memory-maps the
+    standalone ``x.npy`` / ``s.npy`` point arrays: the fp64 metadata
+    (``s_np``, used for host-side planning) then stays disk-backed and
+    lazily paged, while the vectors are still uploaded to the device here
+    (queries need them resident; the mmap only spares the intermediate
+    host copy).  ``valid`` is always a fresh writable copy (lazy deletion
+    mutates it in place).
+    """
     import json
     import os
     from .graph import CubeMap, LayerGraph, squared_norms
-    meta = json.load(open(os.path.join(directory, "meta.json")))
-    z = np.load(os.path.join(directory, "arrays.npz"))
+    with open(os.path.join(directory, "meta.json")) as f:
+        meta = json.load(f)
     cfg = CubeGraphConfig(**meta["cfg"])
     grid = GridSpec(lo=np.asarray(meta["grid"]["lo"]),
                     hi=np.asarray(meta["grid"]["hi"]),
                     n_layers=meta["grid"]["n_layers"])
-    x = jnp.asarray(z["x"])
-    layers = []
-    for i, level in enumerate(meta["levels"]):
-        cubes = CubeMap(uniq=z[f"l{i}_uniq"], members=z[f"l{i}_members"],
-                        counts=z[f"l{i}_counts"], entry=z[f"l{i}_entry"])
-        layers.append(LayerGraph(
-            level=level, layer=grid.layer(level), cube_of=z[f"l{i}_cube_of"],
-            cubes=cubes, nbrs=jnp.asarray(z[f"l{i}_nbrs"]),
-            xnbrs=jnp.asarray(z[f"l{i}_xnbrs"])))
+    x_path = os.path.join(directory, "x.npy")
+    with np.load(os.path.join(directory, "arrays.npz")) as z:
+        if os.path.exists(x_path):
+            x_np = np.load(x_path, mmap_mode=mmap_mode)
+            s_np = np.load(os.path.join(directory, "s.npy"),
+                           mmap_mode=mmap_mode)
+            valid = np.array(np.load(os.path.join(directory, "valid.npy")))
+        else:                       # legacy artifacts: everything in the npz
+            x_np, s_np, valid = z["x"], z["s"], np.array(z["valid"])
+        layers = []
+        for i, level in enumerate(meta["levels"]):
+            cubes = CubeMap(uniq=np.array(z[f"l{i}_uniq"]),
+                            members=np.array(z[f"l{i}_members"]),
+                            counts=np.array(z[f"l{i}_counts"]),
+                            entry=np.array(z[f"l{i}_entry"]))
+            layers.append(LayerGraph(
+                level=level, layer=grid.layer(level),
+                cube_of=np.array(z[f"l{i}_cube_of"]), cubes=cubes,
+                nbrs=jnp.asarray(np.array(z[f"l{i}_nbrs"])),
+                xnbrs=jnp.asarray(np.array(z[f"l{i}_xnbrs"]))))
+    x = jnp.asarray(x_np)
     idx = CubeGraphIndex(cfg, grid, layers, x,
-                         jnp.asarray(z["s"], jnp.float32),
-                         squared_norms(x), z["valid"].copy())
-    idx.s_np = z["s"]
+                         jnp.asarray(s_np, jnp.float32),
+                         squared_norms(x), valid)
+    idx.s_np = s_np          # fresh array (or caller-requested memmap view)
     return idx
+
+
+def load_index_extras(directory: str, names: Sequence[str],
+                      mmap_mode: Optional[str] = None):
+    """(arrays dict for ``names``, extra_meta dict) attached by
+    :func:`save_index` — the artifact-level payload without the index."""
+    import json
+    import os
+    with open(os.path.join(directory, "meta.json")) as f:
+        meta = json.load(f)
+    arrays = {name: np.load(os.path.join(directory, f"{name}.npy"),
+                            mmap_mode=mmap_mode) for name in names}
+    return arrays, meta.get("extra", {})

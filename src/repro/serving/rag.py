@@ -63,6 +63,41 @@ class DocumentStore:
             self.manager = None
             self.index = CubeGraphIndex.build(x, s, index_cfg)
 
+    @classmethod
+    def restore(cls, docs: Sequence[Document], directory: str,
+                stream_cfg: Optional[StreamConfig] = None,
+                shard_mesh=None, resume: bool = True) -> "DocumentStore":
+        """Warm-start a streaming store from a snapshot directory instead of
+        re-ingesting: the manager restores via
+        ``SegmentManager.restore`` (mmapped segment artifacts + WAL-tail
+        replay) and answers queries bit-for-bit identically to the replica
+        that wrote the snapshot.  ``docs`` must be the same document list,
+        in the same order, as when the snapshot was taken — store positions
+        double as global point ids."""
+        obj = cls.__new__(cls)
+        obj.docs = list(docs)
+        obj.streaming = True
+        obj.index = None
+        obj.manager = SegmentManager.restore(directory, cfg=stream_cfg,
+                                             shard_mesh=shard_mesh,
+                                             resume=resume)
+        if obj.manager.n_total != len(obj.docs):
+            raise ValueError(
+                f"snapshot knows {obj.manager.n_total} points but "
+                f"{len(obj.docs)} documents were provided — pass exactly "
+                "the snapshot-time document list (insert new documents "
+                "through store.insert after restoring)")
+        return obj
+
+    def snapshot_to(self, directory: str) -> dict:
+        """Durably snapshot the streaming backend (see
+        ``SegmentManager.snapshot_to``); static stores have nothing
+        incremental to persist and should use ``core.cubegraph.save_index``
+        directly."""
+        if not self.streaming:
+            raise ValueError("snapshot_to requires a streaming store")
+        return self.manager.snapshot_to(directory)
+
     def retrieve(self, query_emb: np.ndarray, filt: Filter, k: int,
                  ef: int = 64) -> List[List[Document]]:
         q = np.atleast_2d(query_emb)

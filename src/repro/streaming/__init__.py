@@ -7,14 +7,22 @@
                 an epoch guard), TTL expiry, point-store GC
 - ``query``     temporal segment pruning + fan-out (per-segment graph search
                 or mesh-sharded kernel scan) + exact ``(gid, dist)`` merge
+- ``persistence``  durability: CRC-framed write-ahead log, immutable
+                per-segment artifacts, atomic versioned manifest, and the
+                crash-consistent restore path (``SegmentManager.restore``)
 """
 from .manager import CompactionPlan, SegmentManager, StreamConfig
+from .persistence import (RestoreError, StreamPersistence, WriteAheadLog,
+                          load_manifest, restore_manager)
 from .query import merge_topk, query_segments, temporal_bounds
-from .segments import (DeltaBuffer, PointStore, SealedSegment,
+from .segments import (DeltaBuffer, DeltaSnapshot, PointStore, SealedSegment,
                        SegmentQueryStats)
 
 __all__ = [
     "CompactionPlan", "SegmentManager", "StreamConfig",
-    "DeltaBuffer", "PointStore", "SealedSegment", "SegmentQueryStats",
+    "DeltaBuffer", "DeltaSnapshot", "PointStore", "SealedSegment",
+    "SegmentQueryStats",
     "merge_topk", "query_segments", "temporal_bounds",
+    "RestoreError", "StreamPersistence", "WriteAheadLog",
+    "load_manifest", "restore_manager",
 ]

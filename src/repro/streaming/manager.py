@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import os
 import threading
 from typing import List, Optional, Sequence, Tuple
 
@@ -62,6 +63,13 @@ class StreamConfig:
     # a device mesh when one is attached).
     n_shards: int = 0
     store_chunk: int = 4096               # PointStore GC granularity (rows)
+    # Durability (repro.streaming.persistence): with ``persist_dir`` set the
+    # manager WAL-logs every ingest/delete/GC and checkpoints (segment
+    # artifacts + manifest swap) at each segment-list transition, so a
+    # crashed replica restores via ``SegmentManager.restore(persist_dir)``.
+    persist_dir: Optional[str] = None
+    wal_fsync_every: int = 32             # WAL appends between fsyncs
+    mmap_segments: bool = True            # restore x/s via np.load(mmap_mode)
     index_cfg: CubeGraphConfig = dataclasses.field(
         default_factory=CubeGraphConfig)
 
@@ -98,7 +106,7 @@ class SegmentManager:
     """
 
     def __init__(self, d: int, m: int, cfg: StreamConfig = StreamConfig(),
-                 shard_mesh=None):
+                 shard_mesh=None, _restoring: bool = False):
         self.d = int(d)
         self.m = int(m)
         self.cfg = cfg
@@ -118,6 +126,19 @@ class SegmentManager:
         self.counters = {"sealed": 0, "compactions": 0, "expired_segments": 0,
                          "expired_points": 0, "deleted": 0,
                          "store_gc_points": 0}
+        self.persist = None                         # StreamPersistence
+        self._suspend_ckpt = False                  # batched seals in ingest
+        if cfg.persist_dir and not _restoring:
+            from .persistence import MANIFEST_NAME, StreamPersistence
+            if os.path.exists(os.path.join(cfg.persist_dir, MANIFEST_NAME)):
+                raise ValueError(
+                    f"{cfg.persist_dir!r} already holds a snapshot — use "
+                    "SegmentManager.restore(...) to resume it")
+            self.persist = StreamPersistence(cfg.persist_dir,
+                                             cfg.wal_fsync_every)
+            # publish an (empty) manifest immediately so the directory is
+            # restorable even if we crash before the first seal
+            self.persist.checkpoint(self)
 
     # ------------------------------------------------------------------
     # Liveness ledger / point store
@@ -143,10 +164,15 @@ class SegmentManager:
         return self.store.get(gids)
 
     def gc_store(self) -> int:
-        """Free point-store chunks with no live id left; returns #rows."""
+        """Free point-store chunks with no live id left; returns #rows.
+        WAL-logged (when persistence is attached) so restore replays the
+        same chunk frees instead of resurrecting retired rows."""
         with self._lock:
-            freed = self.store.gc(self.alive)
-        self.counters["store_gc_points"] += freed
+            dead = self.store.dead_chunks(self.alive)
+            if self.persist is not None and len(dead):
+                self.persist.log_gc(dead)         # log-before-mutate
+            freed = self.store.free_chunks(dead)
+            self.counters["store_gc_points"] += freed
         return freed
 
     # ------------------------------------------------------------------
@@ -161,18 +187,44 @@ class SegmentManager:
         s = np.atleast_2d(np.asarray(s, np.float64))
         n_add = x.shape[0]
         with self._lock:
+            epoch0 = self.epoch
+            # log-before-mutate: if the WAL append fails (disk full), the
+            # append is rolled back in the log and nothing in memory has
+            # changed — the manager never holds phantom alive points
+            if self.persist is not None and n_add:
+                self.persist.log_ingest(self.store.n_total, x, s)
             gids = self.store.append(x, s)
             self._alive = grow_rows(self.n_total, (self._alive, False))[0]
             self._alive[gids] = True
             self.now = max(self.now, float(s[:, self.time_dim].max()))
-            lo = 0
-            while lo < n_add:
-                room = max(self.cfg.seal_max_points - self.delta.n_live, 1)
-                take = min(room, n_add - lo)
-                self.delta.append(x[lo:lo + take], s[lo:lo + take],
-                                  gids[lo:lo + take])
-                lo += take
-                self.maybe_seal()
+            # checkpoints are deferred to the end of the batch so a seal
+            # mid-loop never captures a half-appended delta buffer
+            self._suspend_ckpt = True
+            try:
+                lo = 0
+                while lo < n_add:
+                    room = max(self.cfg.seal_max_points - self.delta.n_live,
+                               1)
+                    take = min(room, n_add - lo)
+                    self.delta.append(x[lo:lo + take], s[lo:lo + take],
+                                      gids[lo:lo + take])
+                    lo += take
+                    self.maybe_seal()
+            finally:
+                self._suspend_ckpt = False
+            if self.persist is not None and self.epoch != epoch0:
+                self.persist.checkpoint(self)
+        return gids
+
+    def _apply_ingest(self, x: np.ndarray, s: np.ndarray) -> np.ndarray:
+        """WAL-replay ingest: store/liveness/delta updates with no logging
+        and no sealing (restore reproduces the last manifest's segmentation
+        exactly; an over-full delta seals on the next live ingest)."""
+        gids = self.store.append(x, s)
+        self._alive = grow_rows(self.n_total, (self._alive, False))[0]
+        self._alive[gids] = True
+        self.now = max(self.now, float(s[:, self.time_dim].max()))
+        self.delta.append(x, s, gids)
         return gids
 
     def delete(self, gids: Sequence[int]) -> int:
@@ -182,12 +234,23 @@ class SegmentManager:
             live = gids[self._alive[gids]]
             if len(live) == 0:
                 return 0
-            self._alive[live] = False
-            hits = self.delta.delete(live)
-            for seg in self.segments:
-                hits += seg.delete(live)
+            if self.persist is not None:     # log-before-mutate
+                self.persist.log_delete(live)
+            hits = self._apply_delete(live)
             if self._pack is not None:
                 self._pack.mark_dead(live)
+        return hits
+
+    def _apply_delete(self, live: np.ndarray) -> int:
+        """Shared core of :meth:`delete` and WAL replay: flip liveness and
+        lazily delete from the delta buffer and every sealed segment."""
+        live = live[self._alive[live]]
+        if len(live) == 0:
+            return 0
+        self._alive[live] = False
+        hits = self.delta.delete(live)
+        for seg in self.segments:
+            hits += seg.delete(live)
         self.counters["deleted"] += hits
         return hits
 
@@ -218,8 +281,16 @@ class SegmentManager:
             self.segments.append(seg)
             self.segments.sort(key=lambda g: g.t_min)
             self.epoch += 1
-        self.counters["sealed"] += 1
+            self.counters["sealed"] += 1
+            self._checkpoint_if_attached()
         return seg
+
+    def _checkpoint_if_attached(self) -> None:
+        """Durably checkpoint after a segment-list transition (no-op without
+        persistence; deferred during a bulk ingest, which checkpoints once
+        at the batch boundary)."""
+        if self.persist is not None and not self._suspend_ckpt:
+            self.persist.checkpoint(self)
 
     # ------------------------------------------------------------------
     # Retention / TTL
@@ -240,12 +311,18 @@ class SegmentManager:
                     self.counters["expired_segments"] += 1
                 else:
                     kept.append(seg)
-            if len(kept) != len(self.segments):
+            list_changed = len(kept) != len(self.segments)
+            if list_changed:
                 self.segments = kept
                 self.epoch += 1
             gl = self.delta.expire_before(cutoff)
             self._alive[gl] = False
-        self.counters["expired_points"] += dropped + len(gl)
+            self.counters["expired_points"] += dropped + len(gl)
+            # list_changed matters on its own: dropping an all-dead segment
+            # flips no liveness bit but still bumps the epoch and must reach
+            # the manifest, or restore resurrects the segment
+            if list_changed or dropped or len(gl):
+                self._checkpoint_if_attached()
         return dropped + len(gl)
 
     # ------------------------------------------------------------------
@@ -281,12 +358,19 @@ class SegmentManager:
                                            Optional[SealedSegment]]]:
         """Build every replacement segment in the plan — the expensive part,
         run without the lock (this is what ``compact_async`` moves off the
-        ingest/query path).  Returns ``(victims, replacement)`` pairs."""
+        ingest/query path).  With persistence attached the replacements'
+        durable artifacts are also staged here, lock-free, so the publish
+        checkpoint under the lock only swaps state + manifest.  Returns
+        ``(victims, replacement)`` pairs."""
         built: List[Tuple[List[SealedSegment], Optional[SealedSegment]]] = []
         for seg in plan.gc:
             built.append(([seg], seg.compacted()))
         for grp in plan.merges:
             built.append((grp, self._merge_group(grp)))
+        if self.persist is not None:
+            for _, new_seg in built:
+                if new_seg is not None:
+                    self.persist.stage_segment(new_seg)
         return built
 
     def publish_compaction(self, plan: CompactionPlan,
@@ -321,8 +405,10 @@ class SegmentManager:
                 out.sort(key=lambda g: g.t_min)
                 self.segments = out
                 self.epoch += 1
-        if ops:
-            self.counters["compactions"] += 1
+            if ops:
+                self.counters["compactions"] += 1
+            if changed:
+                self._checkpoint_if_attached()
         return ops
 
     def compact(self) -> int:
@@ -398,13 +484,67 @@ class SegmentManager:
                 "compaction_ops": compactions, "store_gc_points": freed}
 
     # ------------------------------------------------------------------
+    # Durability (WAL + manifest snapshots live in streaming/persistence.py)
+    # ------------------------------------------------------------------
+    def snapshot_to(self, directory: str) -> dict:
+        """Write a complete, self-consistent snapshot of this manager to
+        ``directory`` (segment artifacts + state + atomic manifest) and
+        return the manifest dict.
+
+        Segment artifacts are immutable content, so they are staged
+        *without* the lock first; only the state + manifest capture runs
+        under the manager lock, which is what serializes it against
+        ingest, deletes, and — crucially — a racing ``compact_async``
+        publish: the captured state is always entirely pre- or entirely
+        post-publish.  When ``directory`` is this manager's own
+        ``persist_dir`` the attached persistence simply checkpoints; any
+        other directory gets a standalone export (existing artifacts are
+        rewritten there once and reused by later exports to the same
+        place).
+        """
+        from .persistence import StreamPersistence
+        if self.persist is not None and os.path.abspath(directory) \
+                == os.path.abspath(self.persist.root):
+            p, owned = self.persist, False
+        else:
+            p = StreamPersistence(directory, self.cfg.wal_fsync_every)
+            owned = True
+        with self._lock:
+            segments = list(self.segments)
+        for seg in segments:         # lock-free: artifact content is frozen
+            p.stage_segment(seg)
+        try:
+            with self._lock:
+                return p.checkpoint(self)
+        finally:
+            if owned:
+                p.close()
+
+    @classmethod
+    def restore(cls, directory: str, cfg: Optional[StreamConfig] = None,
+                shard_mesh=None, resume: bool = True) -> "SegmentManager":
+        """Rebuild a manager from a snapshot directory: last published
+        manifest + mmapped segment artifacts + WAL-tail replay.  The result
+        answers queries bit-for-bit identically to the snapshotted manager
+        (see ``repro.streaming.persistence.restore_manager``).  ``resume``
+        re-attaches persistence to ``directory`` so the restored manager
+        keeps journaling; pass ``cfg`` to override the persisted config
+        (e.g. a different ``n_shards`` for the read path)."""
+        from .persistence import restore_manager
+        return restore_manager(directory, cfg=cfg, shard_mesh=shard_mesh,
+                               resume=resume)
+
+    # ------------------------------------------------------------------
     # Read path (fan-out lives in streaming/query.py)
     # ------------------------------------------------------------------
-    def snapshot(self) -> Tuple[int, List[SealedSegment]]:
-        """(epoch, segment list copy) — the consistent view a query runs
-        against while compaction publishes concurrently."""
+    def snapshot(self):
+        """(epoch, segment-list copy, frozen delta rows) — the consistent
+        view a query runs against while ingest/seal/compaction publish
+        concurrently.  All three are captured in one lock hold: a list
+        copy alone would let a racing seal move points from the delta into
+        a segment between two reads, duplicating them across blocks."""
         with self._lock:
-            return self.epoch, list(self.segments)
+            return self.epoch, list(self.segments), self.delta.freeze()
 
     def shard_pack(self, epoch: int, segments: List[SealedSegment]):
         """The cached shard pack for ``(epoch, segments)``, rebuilding it if

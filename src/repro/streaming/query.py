@@ -87,8 +87,10 @@ def query_segments(manager, queries: np.ndarray, filt: Optional[Filter],
                    use_shards: Optional[bool] = None, **search_kw):
     """Fan out one query batch across all live segments and merge top-k.
 
-    Runs against a ``manager.snapshot()`` taken at entry, so concurrent
-    compaction publishes never tear the segment list mid-query.  Returns
+    Runs against a snapshot — ``(epoch, segment list, frozen delta copy)``
+    — taken under the manager lock at entry, so concurrent compaction
+    publishes never tear the segment list mid-query and concurrent
+    ingests/seals never mutate the delta rows being scanned.  Returns
     ``(gids [b, k], dists [b, k])`` — plus a list of per-segment
     ``SegmentQueryStats`` when ``return_stats`` is set (pruned segments
     appear with ``pruned=True`` and zero search time; under the sharded
@@ -101,17 +103,20 @@ def query_segments(manager, queries: np.ndarray, filt: Optional[Filter],
     b = queries.shape[0]
     t_lo, t_hi = temporal_bounds(filt, manager.time_dim)
     metric = manager.cfg.index_cfg.metric
-    epoch, segments = manager.snapshot()
+    # one lock hold captures the whole consistent view: the segment list
+    # (epoch guard) AND a frozen copy of the delta's live rows, so a racing
+    # ingest/seal can never resize or reset the buffer mid-scan
+    epoch, segments, delta = manager.snapshot()
 
     blocks_g: List[np.ndarray] = []
     blocks_d: List[np.ndarray] = []
     stats: List[SegmentQueryStats] = []
 
-    if manager.delta.n_live > 0:
-        st = manager.delta.stats()
-        if manager.delta.t_max >= t_lo and manager.delta.t_min <= t_hi:
+    if delta.n_live > 0:
+        st = delta.stats()
+        if delta.t_max >= t_lo and delta.t_min <= t_hi:
             t0 = time.perf_counter()
-            ids, dd = manager.delta.query(queries, filt, k, metric=metric)
+            ids, dd = delta.query(queries, filt, k, metric=metric)
             st.search_ms = (time.perf_counter() - t0) * 1e3
             blocks_g.append(ids)
             blocks_d.append(dd)

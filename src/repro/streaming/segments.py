@@ -18,7 +18,8 @@ import numpy as np
 from ..core import CubeGraphConfig, CubeGraphIndex, Filter
 from ..kernels import filtered_topk
 
-__all__ = ["DeltaBuffer", "PointStore", "SealedSegment", "SegmentQueryStats"]
+__all__ = ["DeltaBuffer", "DeltaSnapshot", "PointStore", "SealedSegment",
+           "SegmentQueryStats", "scan_filtered_topk"]
 
 
 def grow_rows(need: int, *pairs):
@@ -98,21 +99,44 @@ class PointStore:
             present[sel] = True
         return x, s, present
 
-    def gc(self, alive: np.ndarray) -> int:
-        """Free every chunk with no live id left; returns #rows freed.
+    def dead_chunks(self, alive: np.ndarray) -> np.ndarray:
+        """Resident chunk indices with no live id left (GC candidates).
 
         ``alive`` is the manager's per-gid liveness mask (length
-        ``n_total``).  Freeing is whole-chunk (O(1) per chunk, no copying),
-        mirroring the segment-granular retention design.
+        ``n_total``).  Split out from :meth:`gc` so the persistence layer
+        can WAL-log exactly which chunks a GC pass freed and replay the
+        same frees deterministically at restore.
         """
-        freed = 0
-        for ci in list(self._chunks):
+        out = []
+        for ci in sorted(self._chunks):
             lo = ci * self.chunk
             hi = min(lo + self.chunk, self.n_total)
             if hi <= lo or not alive[lo:hi].any():
-                freed += max(hi - lo, 0)
-                del self._chunks[ci]
+                out.append(ci)
+        return np.asarray(out, np.int64)
+
+    def free_chunks(self, chunk_ids: Sequence[int]) -> int:
+        """Release the given resident chunks (O(1) each, no copying);
+        returns #rows freed.  Unknown / already-freed ids are ignored."""
+        freed = 0
+        for ci in np.asarray(chunk_ids, np.int64):
+            ci = int(ci)
+            if ci not in self._chunks:
+                continue
+            lo = ci * self.chunk
+            hi = min(lo + self.chunk, self.n_total)
+            freed += max(hi - lo, 0)
+            del self._chunks[ci]
         return freed
+
+    def gc(self, alive: np.ndarray) -> int:
+        """Free every chunk with no live id left; returns #rows freed.
+
+        Whole-chunk freeing mirrors the segment-granular retention design:
+        gids are ingestion-ordered, so retention retires contiguous id
+        ranges and their chunks empty out together.
+        """
+        return self.free_chunks(self.dead_chunks(alive))
 
     @property
     def resident_points(self) -> int:
@@ -141,12 +165,71 @@ class SegmentQueryStats:
     search_ms: float = 0.0
 
 
+def scan_filtered_topk(queries: np.ndarray, xl: np.ndarray, sl: np.ndarray,
+                       gl: np.ndarray, filt: Optional[Filter], k: int,
+                       metric: str = "l2") -> Tuple[np.ndarray, np.ndarray]:
+    """Exact filtered top-k over copied live rows -> padded global-id
+    blocks ``(gids [b, k], dists [b, k])`` — the shared scan behind both
+    the mutable :class:`DeltaBuffer` and its frozen :class:`DeltaSnapshot`.
+    """
+    b = np.atleast_2d(queries).shape[0]
+    if len(gl) == 0:
+        return (np.full((b, k), -1, np.int64),
+                np.full((b, k), np.inf, np.float32))
+    ids, dd = filtered_topk(np.atleast_2d(queries), xl, sl, filt,
+                            min(k, len(gl)), metric=metric)
+    ids = np.asarray(ids)
+    dd = np.asarray(dd, np.float32)
+    out_i = np.full((b, k), -1, np.int64)
+    out_d = np.full((b, k), np.inf, np.float32)
+    out_i[:, : ids.shape[1]] = np.where(ids >= 0, gl[np.maximum(ids, 0)], -1)
+    out_d[:, : ids.shape[1]] = np.where(ids >= 0, dd, np.inf)
+    return out_i, out_d
+
+
+@dataclasses.dataclass
+class DeltaSnapshot:
+    """Frozen copy of a delta buffer's live rows.
+
+    Taken under the manager lock (:meth:`DeltaBuffer.freeze`) and scanned
+    lock-free afterwards, so a query never observes a concurrent append
+    resizing the buffer's arrays or a seal resetting them mid-scan.  Time
+    bounds cover the *live* rows only (lazily deleted stragglers cannot be
+    returned, so they need not widen the pruning window).
+    """
+
+    x: np.ndarray                # [n_live, d] copied live vectors
+    s: np.ndarray                # [n_live, m] copied live metadata
+    gids: np.ndarray             # [n_live] global ids
+    t_min: float
+    t_max: float
+
+    @property
+    def n_live(self) -> int:
+        """Live rows captured by this snapshot."""
+        return len(self.gids)
+
+    def query(self, queries: np.ndarray, filt: Optional[Filter], k: int,
+              metric: str = "l2") -> Tuple[np.ndarray, np.ndarray]:
+        """Exact filtered top-k over the frozen rows (global ids)."""
+        return scan_filtered_topk(queries, self.x, self.s, self.gids, filt,
+                                  k, metric=metric)
+
+    def stats(self, segment_id: int = -1) -> SegmentQueryStats:
+        """Fresh per-query accounting row for this snapshot."""
+        return SegmentQueryStats(segment_id=segment_id, kind="delta",
+                                 n_live=self.n_live, t_min=self.t_min,
+                                 t_max=self.t_max)
+
+
 class DeltaBuffer:
     """Append-only write buffer with lazy deletion and exact filtered top-k.
 
     Arrays grow amortized-doubling; deletes flip a validity mask.  Queries
     scan only live rows through ``filtered_topk`` (kernel path when the
     filter encodes, jnp fallback otherwise), so delta answers are exact.
+    Concurrent readers must go through :meth:`freeze` (under the owner's
+    lock) — the buffer itself is not safe to scan while appends run.
     """
 
     def __init__(self, d: int, m: int, time_dim: int, capacity: int = 1024):
@@ -213,6 +296,15 @@ class DeltaBuffer:
         return (self.x[keep].copy(), self.s[keep].copy(),
                 self.gids[keep].copy())
 
+    def freeze(self) -> DeltaSnapshot:
+        """Copy the live rows into an immutable :class:`DeltaSnapshot`
+        (call under the owning manager's lock)."""
+        xl, sl, gl = self.live_points()
+        t = sl[:, self.time_dim]
+        return DeltaSnapshot(xl, sl, gl,
+                             float(t.min()) if len(gl) else np.inf,
+                             float(t.max()) if len(gl) else -np.inf)
+
     def reset(self) -> None:
         """Empty the buffer (after its live points were sealed away)."""
         self.valid[: self.size] = False
@@ -223,21 +315,9 @@ class DeltaBuffer:
     def query(self, queries: np.ndarray, filt: Optional[Filter], k: int,
               metric: str = "l2") -> Tuple[np.ndarray, np.ndarray]:
         """Exact filtered top-k over live rows -> (global ids, dists)."""
-        b = np.atleast_2d(queries).shape[0]
         xl, sl, gl = self.live_points()
-        if len(gl) == 0:
-            return (np.full((b, k), -1, np.int64),
-                    np.full((b, k), np.inf, np.float32))
-        ids, dd = filtered_topk(np.atleast_2d(queries), xl, sl, filt,
-                                min(k, len(gl)), metric=metric)
-        ids = np.asarray(ids)
-        dd = np.asarray(dd, np.float32)
-        out_i = np.full((b, k), -1, np.int64)
-        out_d = np.full((b, k), np.inf, np.float32)
-        out_i[:, : ids.shape[1]] = np.where(ids >= 0, gl[np.maximum(ids, 0)],
-                                            -1)
-        out_d[:, : ids.shape[1]] = np.where(ids >= 0, dd, np.inf)
-        return out_i, out_d
+        return scan_filtered_topk(queries, xl, sl, gl, filt, k,
+                                  metric=metric)
 
     def stats(self, segment_id: int = -1) -> SegmentQueryStats:
         """Fresh per-query accounting row for this buffer."""
@@ -260,6 +340,10 @@ class SealedSegment:
         self.index = index
         self.gids = np.asarray(gids, np.int64)
         self.time_dim = int(time_dim)
+        # durable-artifact bookkeeping: persistence root -> artifact dir
+        # name, filled in by repro.streaming.persistence when this segment
+        # is written to (or restored from) a snapshot directory
+        self.artifacts: Dict[str, str] = {}
         t = self.index.s_np[:, time_dim]
         self.t_min = float(t.min()) if len(t) else np.inf
         self.t_max = float(t.max()) if len(t) else -np.inf

@@ -1,0 +1,493 @@
+"""Durable streaming snapshots: WAL + manifest persistence + crash recovery.
+
+The acceptance property: a ``SegmentManager`` restored from disk answers a
+64-query batch **bit-for-bit identically** (gids and distances) to the live
+manager it was snapshotted from, on both the per-segment fan-out and the
+``n_shards > 1`` sharded read paths, across arbitrary interleavings of
+ingest / delete / seal / compact / expire / GC.  The crash-injection tests
+kill persistence at its three worst instants (mid-WAL-append, mid-segment-
+write, between segment write and manifest rename) and assert restore always
+recovers the last consistent manifest without duplicating or losing
+acknowledged points.
+"""
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.core import CubeGraphConfig, CubeGraphIndex, IntervalFilter
+from repro.core.cubegraph import load_index, save_index
+from repro.core.workloads import make_dataset
+from repro.streaming import RestoreError, SegmentManager, StreamConfig
+
+IDX_CFG = CubeGraphConfig(n_layers=2, m_intra=8, m_cross=2)
+D, M, TIME_DIM = 8, 2, 1
+OPS = ("ingest", "delete", "seal", "compact", "expire", "gc")
+
+
+def _stream_cfg(persist_dir=None, n_shards=2, seal=48, ttl=np.inf):
+    return StreamConfig(time_dim=TIME_DIM, seal_max_points=seal, ttl=ttl,
+                        compact_max_segments=3, n_shards=n_shards,
+                        store_chunk=64, persist_dir=persist_dir,
+                        index_cfg=IDX_CFG)
+
+
+def _run_program(mgr, rng, op_kinds):
+    """Apply one op interleaving; ingests use a monotone event time."""
+    t = getattr(mgr, "_test_t", 0)
+    for kind in op_kinds:
+        if kind == "ingest":
+            n = int(rng.integers(10, 60))
+            x = rng.normal(size=(n, D)).astype(np.float32)
+            s = rng.uniform(size=(n, M))
+            s[:, TIME_DIM] = (t + np.arange(n)) / 100.0
+            t += n
+            mgr.ingest(x, s)
+        elif kind == "delete" and mgr.n_total:
+            k = max(1, mgr.n_total // 6)
+            mgr.delete(rng.integers(0, mgr.n_total, size=k))
+        elif kind == "seal":
+            mgr.seal()
+        elif kind == "compact":
+            mgr.compact()
+        elif kind == "expire":
+            mgr.expire()
+        elif kind == "gc":
+            mgr.gc_store()
+    mgr._test_t = t
+
+
+_LIVENESS_KEYS = ("n_total", "n_live", "delta_live", "n_segments",
+                  "segment_live", "segment_spans", "now", "sealed",
+                  "deleted", "expired_points", "expired_segments",
+                  "store_gc_points", "store_resident_points")
+
+
+def _assert_bit_identical(live, restored, rng, b=64, k=5):
+    """Restored manager == live manager: liveness stats and bit-for-bit
+    query results on both read paths, filtered and unfiltered."""
+    ls, rs = live.stats(), restored.stats()
+    for key in _LIVENESS_KEYS:
+        assert ls[key] == rs[key], f"stats[{key}]: {ls[key]} != {rs[key]}"
+    q = rng.normal(size=(b, D)).astype(np.float32)
+    t_mid = (live.now / 2.0) if np.isfinite(live.now) else 0.0
+    filters = [None, IntervalFilter(dim=TIME_DIM, lo=np.float32(t_mid))]
+    for filt in filters:
+        for use_shards in (False, True):
+            gl, dl = live.query(q, filt, k=k, ef=48, use_shards=use_shards)
+            gr, dr = restored.query(q, filt, k=k, ef=48,
+                                    use_shards=use_shards)
+            path = "sharded" if use_shards else "fanout"
+            assert np.array_equal(gl, gr), f"gids differ on {path}/{filt}"
+            assert np.array_equal(dl, dr), f"dists differ on {path}/{filt}"
+
+
+def _roundtrip_example(seed, n_ops, tmp_root):
+    """One property example: random interleaving -> snapshot -> restore."""
+    rng = np.random.default_rng(seed)
+    mgr = SegmentManager(D, M, _stream_cfg(ttl=1.5))
+    kinds = ["ingest"] + [OPS[int(rng.integers(0, len(OPS)))]
+                          for _ in range(n_ops - 1)]
+    _run_program(mgr, rng, kinds)
+    snap = os.path.join(tmp_root, f"snap-{seed}")
+    mgr.snapshot_to(snap)
+    restored = SegmentManager.restore(snap, resume=False)
+    _assert_bit_identical(mgr, restored, np.random.default_rng(seed + 1))
+    shutil.rmtree(snap)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 10_000), n_ops=st.integers(2, 8))
+    def test_roundtrip_property_hypothesis(seed, n_ops, tmp_path_factory):
+        """Acceptance (hypothesis, >= 25 examples): arbitrary op
+        interleavings -> snapshot -> restore -> identical query results and
+        liveness stats on both read paths."""
+        _roundtrip_example(seed, n_ops, str(tmp_path_factory.mktemp("prop")))
+except ImportError:                      # pragma: no cover - optional dep
+    pass
+
+
+@pytest.mark.parametrize("seed,n_ops", [(0, 4), (1, 6), (2, 8), (3, 5),
+                                        (4, 7), (5, 3)])
+def test_roundtrip_property_random(seed, n_ops, tmp_path):
+    """Same acceptance property on fixed seeds (runs without hypothesis)."""
+    _roundtrip_example(seed * 977 + 13, n_ops, str(tmp_path))
+
+
+def test_incremental_persistence_roundtrip(tmp_path):
+    """StreamConfig(persist_dir=...): the home directory alone (WAL +
+    checkpoints, no explicit snapshot call) restores bit-for-bit."""
+    root = str(tmp_path / "home")
+    rng = np.random.default_rng(7)
+    mgr = SegmentManager(D, M, _stream_cfg(persist_dir=root, ttl=1.5))
+    _run_program(mgr, rng, ["ingest", "ingest", "delete", "ingest",
+                            "expire", "gc", "compact", "ingest", "delete"])
+    restored = SegmentManager.restore(root)
+    _assert_bit_identical(mgr, restored, np.random.default_rng(8))
+    # the restored replica resumes journaling: mutate it, restore again
+    rng2 = np.random.default_rng(9)
+    _run_program(restored, rng2, ["ingest", "delete"])
+    again = SegmentManager.restore(root, resume=False)
+    _assert_bit_identical(restored, again, np.random.default_rng(10))
+
+
+def test_expiring_all_dead_segment_is_checkpointed(tmp_path):
+    """Regression: expiry of a segment whose points were all already
+    deleted flips no liveness bit, but the segment-list transition must
+    still reach the manifest — otherwise restore resurrects the segment."""
+    root = str(tmp_path / "home")
+    mgr = SegmentManager(D, M, _stream_cfg(persist_dir=root, seal=20,
+                                           ttl=0.3))
+    rng = np.random.default_rng(15)
+    x = rng.normal(size=(20, D)).astype(np.float32)
+    s = rng.uniform(size=(20, M))
+    s[:, TIME_DIM] = np.arange(20) / 100.0
+    mgr.ingest(x, s)                       # seals one segment
+    assert len(mgr.segments) == 1
+    mgr.delete(np.arange(20))              # segment fully dead, still listed
+    mgr.ingest(x, s + np.array([0.0, 1.0]))  # advance event time past ttl
+    mgr.expire()                           # drops the all-dead segment
+    restored = SegmentManager.restore(root, resume=False)
+    _assert_bit_identical(mgr, restored, np.random.default_rng(16))
+
+
+def test_wal_only_restore_before_first_seal(tmp_path):
+    """A crash before any seal restores purely from the WAL tail."""
+    root = str(tmp_path / "home")
+    rng = np.random.default_rng(11)
+    mgr = SegmentManager(D, M, _stream_cfg(persist_dir=root, seal=10_000))
+    _run_program(mgr, rng, ["ingest", "delete", "ingest"])
+    assert len(mgr.segments) == 0
+    restored = SegmentManager.restore(root, resume=False)
+    _assert_bit_identical(mgr, restored, np.random.default_rng(12))
+
+
+# ---------------------------------------------------------------------------
+# Crash injection
+# ---------------------------------------------------------------------------
+class _Crash(RuntimeError):
+    """The simulated kill signal raised from a persistence fault point."""
+
+
+class _FaultHook:
+    """Raise :class:`_Crash` at the ``n``-th hit of one fault point."""
+
+    def __init__(self, point, skip=0):
+        self.point = point
+        self.skip = skip
+
+    def __call__(self, point):
+        if point == self.point:
+            if self.skip == 0:
+                raise _Crash(point)
+            self.skip -= 1
+
+
+def _ingest_block(mgr, rng, n, t0):
+    x = rng.normal(size=(n, D)).astype(np.float32)
+    s = rng.uniform(size=(n, M))
+    s[:, TIME_DIM] = (t0 + np.arange(n)) / 100.0
+    mgr.ingest(x, s)
+
+
+def _live_gids(mgr):
+    return set(np.nonzero(mgr.alive)[0].tolist())
+
+
+def _queried_gids(mgr, rng, k=10):
+    q = rng.normal(size=(16, D)).astype(np.float32)
+    out = set()
+    for use_shards in (False, True):
+        g, _ = mgr.query(q, None, k=k, ef=64, use_shards=use_shards)
+        for row in g:
+            real = [int(v) for v in row if v >= 0]
+            assert len(real) == len(set(real)), "duplicate gid in one row"
+            out |= set(real)
+    return out
+
+
+@pytest.mark.parametrize("point", ["wal.append", "segment.write",
+                                   "manifest.rename"])
+def test_crash_injection_recovers_consistent_state(point, tmp_path):
+    """Kill persistence mid-WAL-append, mid-segment-write, and between
+    segment write and manifest rename: restore must recover every
+    acknowledged point exactly once and stay internally consistent."""
+    root = str(tmp_path / "home")
+    rng = np.random.default_rng(21)
+    mgr = SegmentManager(D, M, _stream_cfg(persist_dir=root, seal=40))
+    _ingest_block(mgr, rng, 35, 0)         # acked, below seal threshold
+    mgr.delete([1, 3, 5])                  # acked
+    acked_live = _live_gids(mgr)
+
+    hook = _FaultHook(point)
+    mgr.persist.fault_hook = hook
+    mgr.persist.wal.fault_hook = hook if point == "wal.append" else None
+    with pytest.raises(_Crash):
+        _ingest_block(mgr, rng, 30, 35)    # crashes (wal now, or at seal)
+
+    restored = SegmentManager.restore(root)    # resume journaling
+    got_live = _live_gids(restored)
+    # acknowledged points survive, exactly once, and none are duplicated
+    assert acked_live <= got_live
+    assert restored.n_total in (35, 65)    # pre-op or fully-applied op
+    assert len(got_live) == restored.n_live
+    queried = _queried_gids(restored, np.random.default_rng(22))
+    assert queried <= got_live
+    assert not ({1, 3, 5} & got_live), "deleted points resurrected"
+    # the torn artifact / WAL tail never blocks a later healthy lifecycle:
+    # the resumed replica keeps journaling and restores again losslessly
+    _ingest_block(restored, np.random.default_rng(23), 50, 70)
+    again = SegmentManager.restore(root, resume=False)
+    assert again.n_live == restored.n_live
+    assert _live_gids(again) == _live_gids(restored)
+
+
+def test_crash_midway_keeps_previous_manifest_loadable(tmp_path):
+    """Crashing the N-th checkpoint leaves the (N-1)-th fully usable."""
+    root = str(tmp_path / "home")
+    rng = np.random.default_rng(31)
+    mgr = SegmentManager(D, M, _stream_cfg(persist_dir=root, seal=30))
+    _ingest_block(mgr, rng, 64, 0)         # two seals -> two checkpoints
+    n_before = mgr.n_total
+    live_before = _live_gids(mgr)
+    mgr.persist.fault_hook = _FaultHook("manifest.rename")
+    with pytest.raises(_Crash):
+        _ingest_block(mgr, rng, 40, 64)    # third seal crashes pre-rename
+    restored = SegmentManager.restore(root, resume=False)
+    # the crashed batch was WAL-logged before the torn checkpoint, so the
+    # restored state may include it (in the delta) — never half a segment
+    assert _live_gids(restored) >= live_before
+    assert restored.n_total in (n_before, n_before + 40)
+    assert sum(restored.stats()["segment_live"]) + restored.delta.n_live \
+        == restored.n_live
+
+
+def test_concurrent_compaction_vs_snapshot(tmp_path):
+    """`compact_async` racing `snapshot_to` under real threads: every
+    snapshot restores to either the pre- or post-publish epoch — never a
+    torn mix — and the exact sharded read path answers identically."""
+    rng = np.random.default_rng(41)
+    mgr = SegmentManager(D, M, _stream_cfg(seal=40))
+    _ingest_block(mgr, rng, 280, 0)
+    mgr.delete(rng.integers(0, 280, size=120))
+    epoch_before = mgr.epoch
+
+    snaps = []
+    t = mgr.compact_async()
+    i = 0
+    while t.is_alive() or i < 2:           # overlap + at least 2 snapshots
+        snap = str(tmp_path / f"snap-{i}")
+        mgr.snapshot_to(snap)
+        snaps.append(snap)
+        i += 1
+        if i > 8:
+            break
+    mgr.wait_for_compaction()
+    assert mgr.epoch > epoch_before        # the race actually published
+
+    q = rng.normal(size=(32, D)).astype(np.float32)
+    gl, dl = mgr.query(q, None, k=8)       # exact path: compaction-invariant
+    live_set = _live_gids(mgr)
+    for snap in snaps:
+        r = SegmentManager.restore(snap, resume=False)
+        # no torn mix: each live gid lives in exactly one place
+        seen = []
+        for seg in r.segments:
+            seen.extend(seg.gids[seg.index.valid].tolist())
+        seen.extend(r.delta.gids[: r.delta.size][
+            r.delta.valid[: r.delta.size]].tolist())
+        assert len(seen) == len(set(seen)), f"{snap}: gid in two segments"
+        assert set(seen) == live_set, f"{snap}: liveness diverged"
+        gr, dr = r.query(q, None, k=8)
+        assert np.array_equal(dl, dr)
+        assert np.array_equal(gl, gr)
+
+
+def test_torn_wal_tail_at_file_level(tmp_path):
+    """A SIGKILL/power-cut torn frame (simulated by truncating the WAL
+    mid-frame on disk) loses only the torn record; a resuming replica
+    truncates the tail and keeps journaling from the durable prefix."""
+    root = str(tmp_path / "home")
+    rng = np.random.default_rng(25)
+    mgr = SegmentManager(D, M, _stream_cfg(persist_dir=root, seal=10_000))
+    _ingest_block(mgr, rng, 20, 0)
+    mgr.persist.close()
+    wal = next(p for p in os.listdir(root) if p.startswith("wal-"))
+    path = os.path.join(root, wal)
+    size = os.path.getsize(path)
+    with open(path, "r+b") as f:
+        f.truncate(size - 7)               # rip the last frame apart
+    restored = SegmentManager.restore(root)      # resume=True truncates
+    assert restored.n_total == 0                 # only record was torn off
+    assert os.path.getsize(path) < size - 7
+    _ingest_block(restored, rng, 15, 20)         # journaling continues
+    assert SegmentManager.restore(root, resume=False).n_total == 15
+
+
+def test_failed_wal_append_leaves_manager_consistent(tmp_path):
+    """An in-process WAL append failure (disk full, raising hook) must not
+    leave phantom alive points: the append rolls back in the log and no
+    in-memory state changes, so the manager keeps working after the
+    error."""
+    root = str(tmp_path / "home")
+    rng = np.random.default_rng(27)
+    mgr = SegmentManager(D, M, _stream_cfg(persist_dir=root, seal=10_000))
+    _ingest_block(mgr, rng, 20, 0)
+    wal_size = mgr.persist.wal.offset
+    mgr.persist.wal.fault_hook = _FaultHook("wal.append")
+    with pytest.raises(_Crash):
+        _ingest_block(mgr, rng, 10, 20)
+    # nothing acknowledged, nothing mutated, nothing torn on disk
+    assert mgr.n_total == 20 and mgr.n_live == 20
+    assert mgr.persist.wal.offset == wal_size
+    assert sum(mgr.stats()["segment_live"]) + mgr.delta.n_live == mgr.n_live
+    mgr.persist.wal.fault_hook = None
+    _ingest_block(mgr, rng, 10, 20)        # recovers without restart
+    assert SegmentManager.restore(root, resume=False).n_total == 30
+
+
+def test_resume_after_wal_file_lost(tmp_path):
+    """Regression: resuming a snapshot whose WAL file vanished (partial
+    copy, external cleanup) must re-create a *valid* log — post-resume
+    acknowledged writes have to survive the next restore."""
+    root = str(tmp_path / "home")
+    rng = np.random.default_rng(33)
+    mgr = SegmentManager(D, M, _stream_cfg(persist_dir=root, seal=25))
+    _ingest_block(mgr, rng, 25, 0)         # seal -> checkpoint
+    mgr.persist.close()
+    wal = next(p for p in os.listdir(root) if p.startswith("wal-"))
+    os.remove(os.path.join(root, wal))
+    restored = SegmentManager.restore(root)      # resume=True
+    assert restored.n_total == 25
+    _ingest_block(restored, rng, 10, 25)         # acked post-resume
+    again = SegmentManager.restore(root, resume=False)
+    assert again.n_total == 35                   # nothing silently lost
+
+
+def test_manifest_is_strict_json(tmp_path):
+    """MANIFEST.json must parse under strict JSON (no Infinity/NaN tokens)
+    even for the empty manager's -inf watermark and infinite ttl."""
+    import json
+    root = str(tmp_path / "home")
+    SegmentManager(D, M, _stream_cfg(persist_dir=root, ttl=np.inf))
+
+    def no_constants(_):
+        raise AssertionError("non-standard JSON constant in manifest")
+
+    man = json.loads(open(os.path.join(root, "MANIFEST.json")).read(),
+                     parse_constant=no_constants)
+    assert man["now"] is None and man["cfg"]["ttl"] is None
+    restored = SegmentManager.restore(root, resume=False)
+    assert restored.now == -np.inf and restored.cfg.ttl == np.inf
+
+
+def test_restore_rejects_geometry_cfg_override(tmp_path):
+    """Policy knobs may change on restore; on-disk geometry (store_chunk,
+    time_dim) may not — silently re-keying the store would corrupt it."""
+    root = str(tmp_path / "home")
+    mgr = SegmentManager(D, M, _stream_cfg(persist_dir=root))
+    _ingest_block(mgr, np.random.default_rng(29), 30, 0)
+    with pytest.raises(RestoreError):
+        SegmentManager.restore(root, resume=False, cfg=StreamConfig(
+            time_dim=TIME_DIM, store_chunk=128, index_cfg=IDX_CFG))
+    with pytest.raises(RestoreError):
+        SegmentManager.restore(root, resume=False, cfg=StreamConfig(
+            time_dim=0, store_chunk=64, index_cfg=IDX_CFG))
+    ok = SegmentManager.restore(root, resume=False, cfg=StreamConfig(
+        time_dim=TIME_DIM, store_chunk=64, n_shards=4, seal_max_points=7,
+        index_cfg=IDX_CFG))
+    assert ok.cfg.n_shards == 4 and ok.n_total == 30
+
+
+# ---------------------------------------------------------------------------
+# Corruption / misuse guards
+# ---------------------------------------------------------------------------
+def test_restore_rejects_corrupt_state(tmp_path):
+    """A flipped byte in the state blob fails the manifest checksum."""
+    root = str(tmp_path / "home")
+    mgr = SegmentManager(D, M, _stream_cfg(persist_dir=root))
+    _ingest_block(mgr, np.random.default_rng(51), 60, 0)
+    state = next(p for p in os.listdir(root) if p.startswith("state-"))
+    path = os.path.join(root, state)
+    blob = bytearray(open(path, "rb").read())
+    blob[len(blob) // 2] ^= 0xFF
+    open(path, "wb").write(bytes(blob))
+    with pytest.raises(RestoreError):
+        SegmentManager.restore(root)
+
+
+def test_attach_to_existing_snapshot_refuses(tmp_path):
+    """Constructing a fresh manager over a populated persist_dir must not
+    silently shadow the existing snapshot."""
+    root = str(tmp_path / "home")
+    mgr = SegmentManager(D, M, _stream_cfg(persist_dir=root))
+    _ingest_block(mgr, np.random.default_rng(61), 30, 0)
+    with pytest.raises(ValueError):
+        SegmentManager(D, M, _stream_cfg(persist_dir=root))
+
+
+# ---------------------------------------------------------------------------
+# core save/load regression + serving warm start
+# ---------------------------------------------------------------------------
+def test_load_index_survives_artifact_deletion(tmp_path):
+    """Regression: ``load_index`` must materialize every array before the
+    npz context closes — a loaded index stays fully queryable after its
+    on-disk artifact is deleted."""
+    x, s = make_dataset(400, D, M, seed=71)
+    idx = CubeGraphIndex.build(x, s, IDX_CFG)
+    q = np.random.default_rng(72).normal(size=(8, D)).astype(np.float32)
+    f = IntervalFilter(dim=TIME_DIM, lo=np.float32(0.2))
+    ids_a, d_a = idx.query(q, f, k=10, ef=64)
+    art = str(tmp_path / "idx")
+    save_index(idx, art)
+    idx2 = load_index(art)
+    shutil.rmtree(art)                      # artifact gone before first use
+    ids_b, d_b = idx2.query(q, f, k=10, ef=64)
+    np.testing.assert_array_equal(ids_a, ids_b)
+    np.testing.assert_allclose(d_a, d_b, rtol=1e-6)
+    idx2.delete([0, 1])                     # valid stays a writable copy
+    assert idx2.deleted_fraction() > 0
+
+
+def test_load_index_mmap_warm_start(tmp_path):
+    """``mmap_mode='r'`` serves the point arrays straight off the immutable
+    artifact and answers identically to the materialized load."""
+    x, s = make_dataset(300, D, M, seed=81)
+    idx = CubeGraphIndex.build(x, s, IDX_CFG)
+    art = str(tmp_path / "idx")
+    save_index(idx, art)
+    idx2 = load_index(art, mmap_mode="r")
+    assert isinstance(idx2.s_np, np.memmap)
+    q = np.random.default_rng(82).normal(size=(4, D)).astype(np.float32)
+    f = IntervalFilter(dim=TIME_DIM, lo=np.float32(0.1))
+    np.testing.assert_array_equal(idx.query(q, f, k=5, ef=48)[0],
+                                  idx2.query(q, f, k=5, ef=48)[0])
+
+
+def test_document_store_warm_start(tmp_path):
+    """Serving path: snapshot a streaming DocumentStore, restore a replica,
+    identical retrievals."""
+    from repro.serving.rag import Document, DocumentStore
+    x, s = make_dataset(200, D, M, seed=91)
+    s[:, TIME_DIM] = np.arange(200) / 200.0
+    rng = np.random.default_rng(92)
+    docs = [Document(doc_id=i,
+                     tokens=rng.integers(2, 99, size=6).astype(np.int32),
+                     embedding=x[i], metadata=s[i]) for i in range(200)]
+    store = DocumentStore(docs, IDX_CFG, streaming=True,
+                          stream_cfg=_stream_cfg(seal=64))
+    store.delete(np.arange(0, 20))
+    snap = str(tmp_path / "snap")
+    store.snapshot_to(snap)
+    replica = DocumentStore.restore(docs, snap, resume=False)
+    f = IntervalFilter(dim=TIME_DIM, lo=np.float32(0.3))
+    got_a = store.retrieve(x[:6], f, k=5)
+    got_b = replica.retrieve(x[:6], f, k=5)
+    assert [[d.doc_id for d in row] for row in got_a] \
+        == [[d.doc_id for d in row] for row in got_b]
+    with pytest.raises(ValueError):
+        DocumentStore.restore(docs[:10], snap, resume=False)

@@ -22,6 +22,11 @@ import sys
 
 REPO = pathlib.Path(__file__).resolve().parent.parent
 LINT_DIRS = ("src/repro/streaming", "src/repro/distributed")
+# Files the docstring lint MUST cover — guards against a rename/move
+# silently dropping a linted subsystem out of LINT_DIRS.
+REQUIRED_LINTED = ("src/repro/streaming/persistence.py",
+                   "src/repro/streaming/manager.py",
+                   "src/repro/distributed/segment_shards.py")
 
 
 def check_bench_docs() -> list:
@@ -70,13 +75,19 @@ def _lint_node(node, path, errors, prefix=""):
 def check_docstrings() -> list:
     """AST docstring lint over the directories named in LINT_DIRS."""
     errors = []
+    linted = set()
     for d in LINT_DIRS:
         for py in sorted((REPO / d).rglob("*.py")):
             rel = py.relative_to(REPO)
+            linted.add(str(rel))
             tree = ast.parse(py.read_text())
             if ast.get_docstring(tree) is None:
                 errors.append(f"{rel}:1 module has no docstring")
             _lint_node(tree, rel, errors)
+    for required in REQUIRED_LINTED:
+        if required not in linted:
+            errors.append(f"{required} was not covered by the docstring "
+                          "lint (moved or deleted?)")
     return errors
 
 
