@@ -72,3 +72,59 @@ def flush_results():
 
 def csv_row(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+# -- machine-readable perf trajectory (BENCH_streaming.json) -----------------
+STREAMING_SECTIONS = ("exp9_", "exp10_", "exp11_", "exp12_")
+_SUMMARY_LATENCY_KEYS = {   # payload key -> (scale to µs, canonical name)
+    "us_per_query": (1.0, "query_us"),
+    "first_query_ms_after_seal": (1e3, "first_query_after_seal_us"),
+    "post_compaction_first_query_ms": (1e3, "post_compaction_query_us"),
+    "restored_first_query_ms": (1e3, "restored_first_query_us"),
+}
+_SUMMARY_BYTES_KEYS = ("pack_nbytes",)
+
+
+def _collect(node, keys, out):
+    """Recursively gather ``keys``-named numeric leaves from a payload."""
+    if isinstance(node, dict):
+        for k, v in node.items():
+            if k in keys and isinstance(v, (int, float)):
+                out.setdefault(k, []).append(v)
+            else:
+                _collect(v, keys, out)
+    elif isinstance(node, (list, tuple)):
+        for v in node:
+            _collect(v, keys, out)
+
+
+def streaming_summary(results: Dict[str, object]) -> Dict[str, dict]:
+    """Compress the streaming-related sections of ``results`` into one
+    machine-readable row each — a **per-metric** median (µs) for every
+    latency key the section recorded, plus peak pack bytes on device — so
+    the perf trajectory is diffable across PRs (``BENCH_streaming.json``).
+    Medians are kept per key (steady-state ``us_per_query`` vs
+    compile-laden ``first_query_ms_after_seal`` differ by orders of
+    magnitude); pooling them would make the digest swing with sample
+    composition rather than performance."""
+    import statistics
+    out: Dict[str, dict] = {}
+    for section, payload in sorted(results.items()):
+        if not section.startswith(STREAMING_SECTIONS):
+            continue
+        lat: Dict[str, list] = {}
+        _collect(payload, _SUMMARY_LATENCY_KEYS, lat)
+        nbytes: Dict[str, list] = {}
+        _collect(payload, set(_SUMMARY_BYTES_KEYS), nbytes)
+        row: Dict[str, object] = {}
+        for key in sorted(lat):
+            scale, name = _SUMMARY_LATENCY_KEYS[key]
+            scaled = [v * scale for v in lat[key]]
+            row[f"median_{name}"] = round(statistics.median(scaled), 1)
+            row[f"n_{name}_samples"] = len(scaled)
+        if nbytes:
+            row["pack_nbytes"] = int(max(v for vs in nbytes.values()
+                                         for v in vs))
+        if row:
+            out[section] = row
+    return out

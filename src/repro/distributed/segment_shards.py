@@ -1,33 +1,52 @@
-"""Mesh-sharded sealed-segment search: segments × shards in one dispatch.
+"""Mesh-sharded sealed-segment search: segments × shards, bucketed by size.
 
 Each sealed segment's live point set is partitioned round-robin into
-``n_shards`` equal-capacity shards; all shards of all segments are stacked
-into one ``[g, cap, ·]`` pack (``g = n_segments × n_shards``) so a query
-fans out over every shard with a single jitted dispatch of the fused
-filtered-top-k kernel (``kernels.ops.sharded_filtered_topk``), followed by
-an exact in-jit merge of the shard-local ``(gid, dist)`` top-k lists.
+``n_shards`` equal-capacity shards and answered by the fused
+filtered-top-k kernel (``kernels.ops.sharded_filtered_topk``) over a
+stacked ``[rows, cap, ·]`` device block, followed by an exact merge of the
+shard-local ``(gid, dist)`` top-k lists.
+
+Two pack layouts exist:
+
+* :class:`BucketedShardPack` (the default serving structure) groups
+  segments into **capacity buckets** — power-of-two multiples of the
+  kernel tile (``cap_multiple``) — so a jumbo post-compaction segment pads
+  only its own bucket, never the small ones.  The pack is **incrementally
+  maintained**: a seal appends one segment's rows into its bucket with a
+  ``dynamic_update_slice`` (the block grows geometrically, so uploads are
+  amortized O(changed segment)), a compaction publish removes the merged
+  inputs and inserts the output into its (likely larger) bucket, an expiry
+  tombstones rows without touching device data, and deletes scatter the
+  ``PAD_META`` sentinel into the metadata block.  All device updates are
+  *functional* (new ``jnp`` arrays, shared buffers): an in-flight query
+  holding a :class:`PackView` keeps reading the arrays it captured, which
+  is what makes delta application safe against the owner's epoch/lock
+  machinery.  A full rebuild happens only on cold start (first sharded
+  query, restore from a snapshot) or when delta application fails.
+
+* :class:`ShardPack` — the legacy monolithic layout (one block, every
+  shard padded to the single largest shard's capacity), rebuilt whole per
+  epoch.  Kept for A/B benchmarking (``StreamConfig(incremental_pack=
+  False)``) and as the simplest exactness oracle.
 
 Placed on a mesh with a ``"shard"`` axis (``make_shard_mesh``), the stacked
 arrays are partitioned across devices along the shard axis, so each device
-scans only its resident shards and only the tiny ``[g, b, k]`` candidate
+scans only its resident shards and only the tiny ``[rows, b, k]`` candidate
 lists cross the interconnect for the merge — the TigerVector-style
 decoupling of partitioned vector storage from query fan-out.
 
 Exactness: every shard computes the same fp32 distance the monolithic
 kernel would for the same point, each true global top-k member is by
 definition inside its own shard's top-k, and global ids are disjoint across
-shards — so concatenating the per-shard lists and taking the global top-k
-reproduces the single-device result bit-for-bit.
-
-Dead points are masked by overwriting their metadata rows with the
-``PAD_META`` sentinel (rejected by every predicate, including ``None``), so
-deletions never require restacking the pack.
+shards — so concatenating the per-shard (and per-bucket) lists and taking
+the global top-k reproduces the single-device result bit-for-bit.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from functools import partial
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,10 +54,12 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..core import Filter
-from ..kernels import PAD_META, sharded_filtered_topk
+from ..kernels import PAD_META, next_pow2, sharded_filtered_topk
 
-__all__ = ["SegmentShardSource", "ShardPack", "build_shard_pack",
-           "make_shard_mesh", "pack_search"]
+__all__ = ["BucketedShardPack", "PackView", "SegmentShardSource",
+           "ShardPack", "bucket_cap_for", "build_bucketed_pack",
+           "build_shard_pack", "host_topk", "make_shard_mesh",
+           "pack_search", "pack_search_blocks"]
 
 _MPAD = 128                      # metadata lane padding (kernel layout)
 
@@ -217,6 +238,424 @@ def build_shard_pack(sources: Sequence[SegmentShardSource], n_shards: int,
     return pack
 
 
+# ---------------------------------------------------------------------------
+# Size-bucketed, incrementally maintained pack
+# ---------------------------------------------------------------------------
+def bucket_cap_for(n_points: int, n_shards: int,
+                   cap_multiple: int = 256) -> int:
+    """Padded per-shard row capacity class for a segment of ``n_points``
+    live rows: the smallest power-of-two multiple of ``cap_multiple`` that
+    fits the segment's largest round-robin shard.  Power-of-two classes
+    bound padding waste at 2× the tile-aligned shard size while keeping the
+    number of distinct device-block shapes (= jit cache entries) to
+    O(log max-segment)."""
+    n_shards = max(int(n_shards), 1)
+    shard_rows = -(-max(int(n_points), 1) // n_shards)
+    return cap_multiple * next_pow2(-(-shard_rows // cap_multiple))
+
+
+@jax.jit
+def _write_rows(block, rows, row0):
+    """Functional row-range write: ``block[row0:row0+len(rows)] = rows``.
+    Returns a new array sharing unchanged buffers — in-flight views of the
+    old block stay valid."""
+    start = (row0,) + (0,) * (block.ndim - 1)
+    return jax.lax.dynamic_update_slice(block, rows, start)
+
+
+@jax.jit
+def _mask_meta(s, rows, cols):
+    """Functional scatter of the ``PAD_META`` sentinel into metadata rows
+    ``(rows[i], cols[i])`` — how deletions reach the device block without a
+    re-upload (duplicate indices are fine: every write stores the same
+    sentinel)."""
+    return s.at[rows, cols, :].set(PAD_META)
+
+
+@dataclasses.dataclass
+class _SegEntry:
+    """Where one segment's points live inside the pack (host bookkeeping
+    for deltas and deletions)."""
+
+    seg_id: int
+    cap: int                     # owning bucket key
+    slot: int                    # slot index inside the bucket
+    gid_sorted: np.ndarray       # sorted gids of the segment's packed rows
+    rows_sorted: np.ndarray      # bucket row per sorted gid
+    cols_sorted: np.ndarray      # bucket column per sorted gid
+
+
+@dataclasses.dataclass
+class _Bucket:
+    """One capacity class: a padded ``[rows, cap, ·]`` device block whose
+    rows are allocated in slots of ``n_shards`` consecutive rows."""
+
+    cap: int
+    x: jnp.ndarray               # [rows, cap, dpad]
+    s: jnp.ndarray               # [rows, cap, MPAD]
+    gids: jnp.ndarray            # [rows, cap] int32 (-1 padding)
+    seg_ids: np.ndarray          # [rows] int64 owning segment (-1 = free)
+    t_min: np.ndarray            # [rows] owning segment's span (+inf free)
+    t_max: np.ndarray            # [rows] (-inf free)
+    free_slots: List[int]
+
+    @property
+    def n_rows(self) -> int:
+        """Allocated rows (live + free) in this bucket's block."""
+        return int(self.x.shape[0])
+
+    @property
+    def nbytes(self) -> int:
+        """Device bytes held by this bucket's block."""
+        return int((self.x.size + self.s.size + self.gids.size) * 4)
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketView:
+    """Immutable per-bucket snapshot handed to the lock-free query path.
+
+    The ``jnp`` arrays are captured by reference (functional updates never
+    mutate them); the host-side row metadata is copied because delta
+    application edits it in place."""
+
+    cap: int
+    x: jnp.ndarray
+    s: jnp.ndarray
+    gids: jnp.ndarray
+    seg_ids: np.ndarray
+    t_min: np.ndarray
+    t_max: np.ndarray
+
+    def active_rows(self, t_lo: float, t_hi: float) -> np.ndarray:
+        """[rows] bool — allocated rows whose segment span overlaps the
+        query window.  All-False means the whole device block is pruned
+        (no kernel dispatch for this bucket)."""
+        return ((self.seg_ids >= 0) & (self.t_max >= t_lo)
+                & (self.t_min <= t_hi))
+
+
+@dataclasses.dataclass(frozen=True)
+class PackView:
+    """Consistent snapshot of a :class:`BucketedShardPack` at one epoch —
+    what queries actually search while deltas keep mutating the pack."""
+
+    epoch: int
+    n_shards: int
+    m: int
+    buckets: Tuple[BucketView, ...]
+    nbytes: int
+
+    @property
+    def n_rows(self) -> int:
+        """Total allocated pack rows across buckets."""
+        return sum(b.x.shape[0] for b in self.buckets)
+
+
+class BucketedShardPack:
+    """Size-bucketed, delta-maintained device pack of sealed segments.
+
+    Segments land in capacity buckets (:func:`bucket_cap_for`); each bucket
+    owns one padded ``[rows, cap, ·]`` device block that grows
+    geometrically in slots of ``n_shards`` rows.  Mutations —
+    :meth:`add_segment` (seal), :meth:`remove_segment` (compaction victim /
+    expiry), :meth:`mark_dead` (deletes) — are **functional** on the device
+    arrays, so a :class:`PackView` captured before a mutation keeps
+    answering from the pre-mutation state.  The owner (``SegmentManager``)
+    serializes mutations and view capture under its lock and stamps
+    ``epoch`` after each applied delta.
+    """
+
+    def __init__(self, n_shards: int, d: int, m: int, epoch: int = 0,
+                 mesh: Optional[Mesh] = None, cap_multiple: int = 256):
+        self.n_shards = max(int(n_shards), 1)
+        self.d = int(d)
+        self.m = int(m)
+        self.dpad = _round_up(d, 128)
+        self.epoch = int(epoch)
+        self.mesh = mesh
+        self.cap_multiple = max(int(cap_multiple), 8)
+        self.buckets: Dict[int, _Bucket] = {}
+        self._entries: Dict[int, _SegEntry] = {}
+
+    # -- geometry ------------------------------------------------------
+    @property
+    def n_segments(self) -> int:
+        """Segments currently packed."""
+        return len(self._entries)
+
+    @property
+    def n_rows(self) -> int:
+        """Total allocated pack rows (live + free) across buckets."""
+        return sum(b.n_rows for b in self.buckets.values())
+
+    @property
+    def nbytes(self) -> int:
+        """Device bytes held by all bucket blocks."""
+        return sum(b.nbytes for b in self.buckets.values())
+
+    def bucket_stats(self) -> Dict[int, Dict[str, int]]:
+        """Per-bucket occupancy: ``{cap: {rows, live_rows, segments}}``."""
+        out = {}
+        for cap, b in sorted(self.buckets.items()):
+            out[cap] = {"rows": b.n_rows,
+                        "live_rows": int((b.seg_ids >= 0).sum()),
+                        "segments": int(len({int(s) for s in b.seg_ids
+                                             if s >= 0}))}
+        return out
+
+    # -- placement -----------------------------------------------------
+    def _place(self, arr: jnp.ndarray) -> jnp.ndarray:
+        """(Re-)pin a bucket block's sharding after a functional update:
+        shard-axis partitioned when a mesh is attached and the row count
+        divides the device count — which :meth:`_init_slots` guarantees
+        for every bucket block it allocates (the check stays defensive)."""
+        if self.mesh is not None \
+                and int(arr.shape[0]) % self.mesh.devices.size == 0:
+            spec = P("shard", *([None] * (arr.ndim - 1)))
+            return jax.device_put(arr, NamedSharding(self.mesh, spec))
+        return arr
+
+    def _new_block(self, rows: int, cap: int):
+        """Fresh zero/PAD device arrays for ``rows`` bucket rows."""
+        x = self._place(jnp.zeros((rows, cap, self.dpad), jnp.float32))
+        s = self._place(jnp.full((rows, cap, _MPAD), PAD_META, jnp.float32))
+        g = self._place(jnp.full((rows, cap), -1, jnp.int32))
+        return x, s, g
+
+    def _init_slots(self) -> int:
+        """Slot count for a fresh bucket block: the smallest number whose
+        row total divides the mesh device count, so every bucket block is
+        shard-axis partitionable for *any* ``n_shards`` (doubling growth
+        preserves divisibility).  1 without a mesh."""
+        if self.mesh is None:
+            return 1
+        nd = int(self.mesh.devices.size)
+        return nd // math.gcd(self.n_shards, nd)
+
+    def _bucket_for(self, cap: int) -> _Bucket:
+        b = self.buckets.get(cap)
+        if b is None:
+            slots = self._init_slots()
+            rows = slots * self.n_shards
+            x, s, g = self._new_block(rows, cap)
+            b = _Bucket(cap, x, s, g,
+                        np.full(rows, -1, np.int64),
+                        np.full(rows, np.inf, np.float64),
+                        np.full(rows, -np.inf, np.float64),
+                        list(range(slots)))
+            self.buckets[cap] = b
+        return b
+
+    def _alloc_slot(self, b: _Bucket) -> int:
+        """Pop the lowest free slot, doubling the block when none is left
+        (geometric growth keeps appends amortized O(changed segment))."""
+        if not b.free_slots:
+            old_slots = b.n_rows // self.n_shards
+            add_slots = max(old_slots, 1)
+            ax, as_, ag = self._new_block(add_slots * self.n_shards, b.cap)
+            b.x = self._place(jnp.concatenate([b.x, ax]))
+            b.s = self._place(jnp.concatenate([b.s, as_]))
+            b.gids = self._place(jnp.concatenate([b.gids, ag]))
+            add_rows = add_slots * self.n_shards
+            b.seg_ids = np.concatenate(
+                [b.seg_ids, np.full(add_rows, -1, np.int64)])
+            b.t_min = np.concatenate(
+                [b.t_min, np.full(add_rows, np.inf, np.float64)])
+            b.t_max = np.concatenate(
+                [b.t_max, np.full(add_rows, -np.inf, np.float64)])
+            b.free_slots.extend(range(old_slots, old_slots + add_slots))
+        b.free_slots.sort()
+        return b.free_slots.pop(0)
+
+    # -- delta protocol ------------------------------------------------
+    def add_segment(self, src: SegmentShardSource) -> None:
+        """Append one segment's live points into its capacity bucket:
+        O(segment) host staging + one ``dynamic_update_slice`` per device
+        array — never touches other segments' rows."""
+        n = len(src.gids)
+        if n == 0:
+            return
+        if src.seg_id in self._entries:
+            raise ValueError(f"segment {src.seg_id} is already packed")
+        cap = bucket_cap_for(n, self.n_shards, self.cap_multiple)
+        b = self._bucket_for(cap)
+        slot = self._alloc_slot(b)
+        row0 = slot * self.n_shards
+        d = src.x.shape[1]
+        xb = np.zeros((self.n_shards, cap, self.dpad), np.float32)
+        sb = np.full((self.n_shards, cap, _MPAD), PAD_META, np.float32)
+        gb = np.full((self.n_shards, cap), -1, np.int32)
+        for sh in range(self.n_shards):
+            idx = np.arange(sh, n, self.n_shards)
+            nn = len(idx)
+            xb[sh, :nn, :d] = src.x[idx]
+            sb[sh, :nn, :] = 0.0
+            sb[sh, :nn, : self.m] = src.s[idx]
+            gb[sh, :nn] = src.gids[idx]
+        r0 = jnp.int32(row0)
+        b.x = self._place(_write_rows(b.x, jnp.asarray(xb), r0))
+        b.s = self._place(_write_rows(b.s, jnp.asarray(sb), r0))
+        b.gids = self._place(_write_rows(b.gids, jnp.asarray(gb), r0))
+        b.seg_ids[row0: row0 + self.n_shards] = src.seg_id
+        b.t_min[row0: row0 + self.n_shards] = src.t_min
+        b.t_max[row0: row0 + self.n_shards] = src.t_max
+        order = np.argsort(src.gids, kind="stable")
+        self._entries[src.seg_id] = _SegEntry(
+            int(src.seg_id), cap, slot,
+            np.asarray(src.gids, np.int64)[order],
+            (row0 + order % self.n_shards).astype(np.int64),
+            (order // self.n_shards).astype(np.int64))
+
+    def remove_segment(self, seg_id: int) -> bool:
+        """Tombstone one segment (compaction victim or expiry): host-only —
+        the slot is freed and its rows drop out of every later view's
+        active mask, so the stale device rows are never merged and get
+        overwritten when the slot is reused."""
+        e = self._entries.pop(int(seg_id), None)
+        if e is None:
+            return False
+        b = self.buckets[e.cap]
+        row0 = e.slot * self.n_shards
+        b.seg_ids[row0: row0 + self.n_shards] = -1
+        b.t_min[row0: row0 + self.n_shards] = np.inf
+        b.t_max[row0: row0 + self.n_shards] = -np.inf
+        b.free_slots.append(e.slot)
+        if not (b.seg_ids >= 0).any():
+            # last live slot gone: release the whole capacity class, so a
+            # retired jumbo bucket doesn't pin device memory at its
+            # historical peak (in-flight views keep their own references;
+            # a later segment of this class re-creates the bucket at one
+            # slot and regrows geometrically)
+            del self.buckets[e.cap]
+        return True
+
+    def mark_dead(self, gids: Sequence[int]) -> int:
+        """Mask points by global id: their metadata rows become
+        ``PAD_META`` (scattered functionally into each touched bucket's
+        device block), so every subsequent view's predicate rejects them.
+        Returns the number of pack positions masked."""
+        g = np.asarray(gids, np.int64)
+        if len(g) == 0:
+            return 0
+        g_lo, g_hi = int(g.min()), int(g.max())
+        per_bucket: Dict[int, List[Tuple[np.ndarray, np.ndarray]]] = {}
+        total = 0
+        # per-segment lookup keeps the index maintainable in O(changed
+        # segment) at add/remove time; the segment count itself is bounded
+        # by the compaction policy, and the gid-range prefilter makes
+        # non-overlapping segments (the common case — gids are
+        # ingestion-ordered) an O(1) skip
+        for e in self._entries.values():
+            if len(e.gid_sorted) == 0 or e.gid_sorted[-1] < g_lo \
+                    or e.gid_sorted[0] > g_hi:
+                continue
+            pos = np.searchsorted(e.gid_sorted, g)
+            pos_c = np.clip(pos, 0, len(e.gid_sorted) - 1)
+            ok = e.gid_sorted[pos_c] == g
+            if not ok.any():
+                continue
+            sel = pos_c[ok]
+            per_bucket.setdefault(e.cap, []).append(
+                (e.rows_sorted[sel], e.cols_sorted[sel]))
+            total += int(sel.size)
+        for cap, hits in per_bucket.items():
+            b = self.buckets[cap]
+            rows = np.concatenate([r for r, _ in hits]).astype(np.int32)
+            cols = np.concatenate([c for _, c in hits]).astype(np.int32)
+            # pad the index vectors to a power of two (repeating the first
+            # hit — the scatter is idempotent) so the jit cache sees
+            # O(log n) distinct scatter shapes, not one per delete batch
+            want = next_pow2(len(rows))
+            pad = want - len(rows)
+            if pad:
+                rows = np.concatenate([rows, np.full(pad, rows[0], np.int32)])
+                cols = np.concatenate([cols, np.full(pad, cols[0], np.int32)])
+            b.s = self._place(_mask_meta(b.s, jnp.asarray(rows),
+                                         jnp.asarray(cols)))
+        return total
+
+    def sync_alive(self, alive: np.ndarray) -> int:
+        """Mask every packed point whose gid is dead in ``alive`` (the
+        manager's liveness bitmap) — used once at cold-build installation
+        to catch deletions that raced the build."""
+        dead = [e.gid_sorted[~alive[e.gid_sorted]]
+                for e in self._entries.values()]
+        dead = np.concatenate(dead) if dead else np.empty(0, np.int64)
+        return self.mark_dead(dead) if len(dead) else 0
+
+    # -- read side -----------------------------------------------------
+    def view(self) -> PackView:
+        """Immutable snapshot for one query (capture under the owner's
+        lock).  Buckets with no live slot are dropped, so an all-free
+        bucket costs queries nothing."""
+        views = []
+        for cap in sorted(self.buckets):
+            b = self.buckets[cap]
+            if (b.seg_ids >= 0).any():
+                views.append(BucketView(cap, b.x, b.s, b.gids,
+                                        b.seg_ids.copy(), b.t_min.copy(),
+                                        b.t_max.copy()))
+        return PackView(self.epoch, self.n_shards, self.m, tuple(views),
+                        self.nbytes)
+
+
+def build_bucketed_pack(sources: Sequence[SegmentShardSource], n_shards: int,
+                        epoch: int = 0, mesh: Optional[Mesh] = None,
+                        cap_multiple: int = 256) -> BucketedShardPack:
+    """Cold-build a :class:`BucketedShardPack` (restore / first query /
+    bucket-geometry change): the same :meth:`~BucketedShardPack.add_segment`
+    delta applied once per segment, so an incrementally maintained pack and
+    a from-scratch build of the same segments answer identically."""
+    if not sources:
+        raise ValueError("build_bucketed_pack needs at least one segment")
+    pack = BucketedShardPack(n_shards, sources[0].x.shape[1],
+                             sources[0].s.shape[1], epoch=epoch, mesh=mesh,
+                             cap_multiple=cap_multiple)
+    for src in sources:
+        pack.add_segment(src)
+    return pack
+
+
+def host_topk(g: np.ndarray, d: np.ndarray, k: int
+              ) -> Tuple[np.ndarray, np.ndarray]:
+    """Exact host-side top-k over concatenated ``(gid, dist)`` candidate
+    rows: ``argpartition`` narrows each row to ``k`` candidates, then one
+    ``lexsort`` orders the slice by ``(dist, gid)``.  The order is total —
+    rows where a *finite* distance tie straddles the k-th position (where
+    argpartition's selection would be input-order-dependent) are
+    re-selected by the full ``(dist, gid)`` order — so the result is
+    deterministic regardless of block concatenation order.  Returns
+    ``(gids [b, k] int64, dists [b, k] fp32)`` padded with
+    ``-1`` / ``+inf``."""
+    d = np.where(g >= 0, np.asarray(d, np.float32), np.inf)
+    g = np.asarray(g, np.int64)
+    if d.shape[1] > k:
+        part = np.argpartition(d, k - 1, axis=1)
+        g_sel = np.take_along_axis(g, part[:, :k], axis=1)
+        d_sel = np.take_along_axis(d, part[:, :k], axis=1)
+        kth = d_sel.max(axis=1)
+        d_rest = np.take_along_axis(d, part[:, k:], axis=1)
+        # +inf boundary ties are harmless (every +inf selection emits
+        # gid -1 below); finite ones get the rare full-sort path
+        amb = np.isfinite(kth) & (d_rest == kth[:, None]).any(axis=1)
+        if amb.any():
+            full = np.lexsort((g[amb], d[amb]))[:, :k]
+            g_sel[amb] = np.take_along_axis(g[amb], full, axis=1)
+            d_sel[amb] = np.take_along_axis(d[amb], full, axis=1)
+        g, d = g_sel, d_sel
+    order = np.lexsort((g, d))           # per-row: dist, then gid
+    out_g = np.take_along_axis(g, order, axis=1)
+    out_d = np.take_along_axis(d, order, axis=1)
+    out_g = np.where(np.isfinite(out_d), out_g, -1)
+    b, w = out_g.shape
+    if w < k:
+        out_g = np.concatenate(
+            [out_g, np.full((b, k - w), -1, np.int64)], axis=1)
+        out_d = np.concatenate(
+            [out_d, np.full((b, k - w), np.inf, np.float32)], axis=1)
+    return out_g, out_d
+
+
 @partial(jax.jit, static_argnames=("k",))
 def _merge_shard_topk(ids, dd, gid_stack, active, k):
     """Shard-local (ids, dists) [g, b, k'] -> exact global (gids, dists)
@@ -234,19 +673,64 @@ def _merge_shard_topk(ids, dd, gid_stack, active, k):
     return jnp.where(jnp.isfinite(out_d), out_g, -1), out_d
 
 
-def pack_search(pack: ShardPack, queries: np.ndarray, filt: Optional[Filter],
+def pack_search_blocks(view: PackView, queries: np.ndarray,
+                       filt: Optional[Filter], k: int,
+                       t_lo: float = -np.inf, t_hi: float = np.inf,
+                       metric: str = "l2"
+                       ) -> List[Tuple[np.ndarray, np.ndarray]]:
+    """One fused-kernel dispatch per non-empty, temporally unpruned bucket.
+
+    A bucket whose segment spans all miss ``[t_lo, t_hi]`` is skipped
+    entirely — temporal pruning drops whole device blocks, not just rows.
+    Each dispatched bucket contributes one exact ``(gids [b, k_b],
+    dists [b, k_b])`` candidate block, ready for the caller's exact
+    ``(gid, dist)`` merge (``streaming.query.merge_topk`` /
+    :func:`host_topk`).
+    """
+    queries = np.atleast_2d(np.asarray(queries, np.float32))
+    blocks: List[Tuple[np.ndarray, np.ndarray]] = []
+    for bv in view.buckets:
+        active = bv.active_rows(t_lo, t_hi)
+        if not active.any():
+            continue                      # whole-block temporal prune
+        kk = min(k, bv.cap)               # per-shard list length
+        # merged width: for k > cap the per-shard lists (= whole shards)
+        # still hold up to rows * kk candidates, so the top-k stays exact
+        k_out = min(k, int(bv.x.shape[0]) * kk)
+        ids, dd = sharded_filtered_topk(queries, bv.x, bv.s, filt, kk,
+                                        metric=metric, m=view.m)
+        out_g, out_d = _merge_shard_topk(ids, dd, bv.gids,
+                                         jnp.asarray(active), k_out)
+        blocks.append((np.asarray(out_g, np.int64),
+                       np.asarray(out_d, np.float32)))
+    return blocks
+
+
+def pack_search(pack, queries: np.ndarray, filt: Optional[Filter],
                 k: int, t_lo: float = -np.inf, t_hi: float = np.inf,
                 metric: str = "l2") -> Tuple[np.ndarray, np.ndarray]:
     """Fan one query batch out over every active shard of the pack and merge
     the shard-local top-k exactly.
 
-    Temporal pruning happens via the ``active`` mask (host-computed from the
-    per-row segment spans) rather than by reshaping the dispatch, so the jit
-    cache sees one static shape per pack.  Returns ``(gids [b, k] int64,
+    ``pack`` is a legacy :class:`ShardPack`, a :class:`BucketedShardPack`,
+    or a :class:`PackView`.  Temporal pruning happens via the ``active``
+    mask (host-computed from the per-row segment spans) — and, for the
+    bucketed layouts, by skipping whole bucket blocks — so the jit cache
+    sees one static shape per pack/bucket.  Returns ``(gids [b, k] int64,
     dists [b, k] fp32)`` with ``-1`` / ``+inf`` padding.
     """
     queries = np.atleast_2d(np.asarray(queries, np.float32))
     b = queries.shape[0]
+    if isinstance(pack, (BucketedShardPack, PackView)):
+        view = pack.view() if isinstance(pack, BucketedShardPack) else pack
+        blocks = pack_search_blocks(view, queries, filt, k, t_lo=t_lo,
+                                    t_hi=t_hi, metric=metric)
+        if not blocks:
+            return (np.full((b, k), -1, np.int64),
+                    np.full((b, k), np.inf, np.float32))
+        g = np.concatenate([bg for bg, _ in blocks], axis=1)
+        d = np.concatenate([bd for _, bd in blocks], axis=1)
+        return host_topk(g, d, k)
     kk = min(k, pack.cap)                 # per-shard list length
     # merged width: for k > cap the per-shard lists (= whole shards) still
     # hold up to n_rows * kk candidates, so the global top-k stays exact

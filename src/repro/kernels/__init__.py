@@ -7,8 +7,8 @@ interpret mode on CPU; see DESIGN.md §2.2).
 - ``ref``           pure-jnp oracles
 - ``ops``           jit'd wrappers with padding + filter encoding
 """
-from .ops import (PAD_META, exact_filtered_search, filtered_topk,
+from .ops import (PAD_META, exact_filtered_search, filtered_topk, next_pow2,
                   pairwise_dist, sharded_filtered_topk)
 
-__all__ = ["PAD_META", "exact_filtered_search", "filtered_topk",
+__all__ = ["PAD_META", "exact_filtered_search", "filtered_topk", "next_pow2",
            "pairwise_dist", "sharded_filtered_topk"]

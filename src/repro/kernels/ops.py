@@ -7,6 +7,7 @@ compare/exchange networks and 128-aligned tiles so they lower via Mosaic).
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional, Tuple
 
 import jax
@@ -19,8 +20,9 @@ from . import ref
 from .distance import pairwise_dist_kernel_call
 from .filtered_topk import filtered_topk_kernel_call
 
-__all__ = ["pairwise_dist", "filtered_topk", "sharded_filtered_topk",
-           "encode_filter", "exact_filtered_search", "PAD_META"]
+__all__ = ["pairwise_dist", "filtered_topk", "next_pow2",
+           "sharded_filtered_topk", "encode_filter", "exact_filtered_search",
+           "PAD_META"]
 
 _POS = 1e30
 _PAD_META = 2e30
@@ -39,11 +41,17 @@ def _pad_to(a, axis, mult, value):
     return jnp.pad(a, widths, constant_values=value)
 
 
-def _next_pow2(v: int) -> int:
+def next_pow2(v: int) -> int:
+    """Smallest power of two >= v — the shared rounding rule behind the
+    kernel's kpad padding and the shard packs' bucket-capacity classes
+    (one definition, so the two shape families can't drift apart)."""
     p = 1
     while p < v:
         p *= 2
     return p
+
+
+_next_pow2 = next_pow2
 
 
 def pairwise_dist(q, x, metric: str = "l2", use_kernel: bool = True,
@@ -181,6 +189,28 @@ def filtered_topk(q, x, s, filt: Optional[Filter], k: int,
     return ids[:bq, :k], dd[:bq, :k]
 
 
+@functools.lru_cache(maxsize=None)
+def _sharded_kernel_dispatch(kind: str, kpad: int, metric: str, tq: int,
+                             tn: int, interpret: bool):
+    """One jitted shard-stack dispatch per (filter kind, k, tile) config.
+
+    The bucketed pack calls :func:`sharded_filtered_topk` once per
+    capacity bucket, so the dispatch must not re-trace per call: this
+    returns a single ``jax.jit``-wrapped callable whose internal cache is
+    keyed on the stack *shape* — each bucket geometry compiles exactly
+    once and every later call (any bucket, any epoch) reuses its
+    executable.
+    """
+    def call(qp, xp, sp, pj):
+        def one(x, s):
+            return filtered_topk_kernel_call(qp, x, s, pj, kind=kind,
+                                             kpad=kpad, metric=metric,
+                                             tq=tq, tn=tn,
+                                             interpret=interpret)
+        return jax.vmap(one)(xp, sp)
+    return jax.jit(call)
+
+
 def sharded_filtered_topk(q, xs, ss, filt: Optional[Filter], k: int,
                           metric: str = "l2", use_kernel: bool = True,
                           tq: int = 64, tn: int = 256, interpret: bool = True,
@@ -236,13 +266,8 @@ def sharded_filtered_topk(q, xs, ss, filt: Optional[Filter], k: int,
     xp = _pad_to(_pad_to(xs, 2, 128, 0.0), 1, tn, 0.0)
     sp = _pad_to(_pad_to(ss, 2, 128, 0.0), 1, tn, _PAD_META)
     pj = jnp.asarray(params)
-
-    def one(x, s):
-        return filtered_topk_kernel_call(qp, x, s, pj, kind=kind, kpad=kpad,
-                                         metric=metric, tq=tq, tn=tn,
-                                         interpret=interpret)
-
-    dd, ids = jax.vmap(one)(xp, sp)
+    dd, ids = _sharded_kernel_dispatch(kind, kpad, metric, tq, tn,
+                                       interpret)(qp, xp, sp, pj)
     return ids[:, :bq, :k], dd[:, :bq, :k]
 
 

@@ -26,6 +26,12 @@ are re-applied to it before the swap, and the query path additionally
 filters its merged result through the liveness bitmap — so a point deleted
 before a query began is never returned, no matter how the query interleaves
 with a concurrent compaction.
+
+The sharded read path's device-resident pack rides the same guarantee:
+every epoch bump applies an O(changed-segments) *delta* to the cached
+size-bucketed pack under the lock (``_apply_pack_delta``), and queries
+read immutable per-epoch ``PackView`` snapshots — see
+``repro.distributed.segment_shards``.
 """
 from __future__ import annotations
 
@@ -62,6 +68,13 @@ class StreamConfig:
     # them with the fused kernel in one dispatch (exact; distributes across
     # a device mesh when one is attached).
     n_shards: int = 0
+    # Pack maintenance for the sealed read path: with ``incremental_pack``
+    # the device-resident pack is size-bucketed and updated by
+    # O(changed-segment) deltas at each seal/publish/expire; ``False``
+    # restores the legacy monolithic pack that rebuilds wholesale on every
+    # epoch bump (kept for A/B benchmarking — see exp12).
+    incremental_pack: bool = True
+    pack_cap_multiple: int = 256          # bucket row-capacity quantum
     store_chunk: int = 4096               # PointStore GC granularity (rows)
     # Durability (repro.streaming.persistence): with ``persist_dir`` set the
     # manager WAL-logs every ingest/delete/GC and checkpoints (segment
@@ -119,7 +132,12 @@ class SegmentManager:
         self._lock = threading.RLock()
         self._next_seg_id = 0
         self._compact_thread: Optional[threading.Thread] = None
-        self._pack = None                           # cached ShardPack
+        # Cached device pack for the sharded read path: a BucketedShardPack
+        # kept in sync by _apply_pack_delta at every segment-list
+        # transition (or a legacy ShardPack rebuilt per epoch when
+        # cfg.incremental_pack is off).  None until the first sharded
+        # query cold-builds it — including after restore().
+        self._pack = None
         self.store = PointStore(d, m, chunk=cfg.store_chunk)
         self._alive = np.zeros(1024, bool)
         self.now = -math.inf                        # event-time watermark
@@ -282,8 +300,40 @@ class SegmentManager:
             self.segments.sort(key=lambda g: g.t_min)
             self.epoch += 1
             self.counters["sealed"] += 1
+            self._apply_pack_delta((), (seg,))
             self._checkpoint_if_attached()
         return seg
+
+    def _apply_pack_delta(self, removed, added) -> None:
+        """Keep the cached bucketed pack in sync with one segment-list
+        transition (called under the lock, after the epoch bump): victims
+        tombstone their bucket slots, each added segment's live points
+        append into their capacity bucket — O(changed segments), never a
+        re-stack of the rest of the pack.  With ``incremental_pack`` off
+        (or a legacy pack cached) this degrades to the old behavior:
+        invalidate and cold-rebuild on the next sharded query.  Any delta
+        failure also falls back to invalidation, so queries stay correct.
+        """
+        pack = self._pack
+        if pack is None:
+            return
+        from ..distributed.segment_shards import (BucketedShardPack,
+                                                  SegmentShardSource)
+        if (self.cfg.n_shards < 1 or not self.cfg.incremental_pack
+                or not isinstance(pack, BucketedShardPack)):
+            self._pack = None
+            return
+        try:
+            for seg in removed:
+                pack.remove_segment(seg.seg_id)
+            for seg in added:
+                xl, sl, gl = seg.live_points()
+                if len(gl):
+                    pack.add_segment(SegmentShardSource(
+                        seg.seg_id, xl, sl, gl, seg.t_min, seg.t_max))
+            pack.epoch = self.epoch
+        except Exception:                 # pragma: no cover - defensive
+            self._pack = None
 
     def _checkpoint_if_attached(self) -> None:
         """Durably checkpoint after a segment-list transition (no-op without
@@ -304,17 +354,20 @@ class SegmentManager:
             cutoff = (self.now if now is None else float(now)) - self.cfg.ttl
             dropped = 0
             kept: List[SealedSegment] = []
+            expired: List[SealedSegment] = []
             for seg in self.segments:
                 if seg.t_max < cutoff:
                     self._alive[seg.gids] = False
                     dropped += seg.n_live
                     self.counters["expired_segments"] += 1
+                    expired.append(seg)
                 else:
                     kept.append(seg)
             list_changed = len(kept) != len(self.segments)
             if list_changed:
                 self.segments = kept
                 self.epoch += 1
+                self._apply_pack_delta(expired, ())
             gl = self.delta.expire_before(cutoff)
             self._alive[gl] = False
             self.counters["expired_points"] += dropped + len(gl)
@@ -402,9 +455,17 @@ class SegmentManager:
             out = [g for g in out if g.n_live > 0]
             changed = ops > 0 or len(out) != len(self.segments)
             if changed:
+                pre_ids = {id(g): g for g in self.segments}
+                post_ids = {id(g) for g in out}
                 out.sort(key=lambda g: g.t_min)
                 self.segments = out
                 self.epoch += 1
+                # pack delta = the object-identity diff of the swap (covers
+                # merge victims, GC rewrites reusing a seg_id, and all-dead
+                # segments silently dropped from the list)
+                self._apply_pack_delta(
+                    [g for oid, g in pre_ids.items() if oid not in post_ids],
+                    [g for g in out if id(g) not in pre_ids])
             if ops:
                 self.counters["compactions"] += 1
             if changed:
@@ -547,18 +608,31 @@ class SegmentManager:
             return self.epoch, list(self.segments), self.delta.freeze()
 
     def shard_pack(self, epoch: int, segments: List[SealedSegment]):
-        """The cached shard pack for ``(epoch, segments)``, rebuilding it if
-        the segment list has moved on since the cached generation.
+        """The consistent shard-pack read state for ``(epoch, segments)``:
+        an immutable ``PackView`` of the delta-maintained bucketed pack
+        (or the legacy monolithic ``ShardPack`` with ``incremental_pack``
+        off), cold-building when no cached pack matches the epoch — first
+        sharded query, after ``restore()``, or after a delta fallback.
 
-        The build runs outside the lock (it copies live points and uploads
-        device arrays); installation re-checks the epoch and syncs the pack
-        against deletions that landed mid-build.
+        The cold build runs outside the lock (it copies live points and
+        uploads device arrays); installation re-checks the epoch and syncs
+        the pack against deletions that landed mid-build.  The view (or
+        legacy pack) itself is captured under the lock, so it can never
+        interleave with a concurrent delta application.
         """
-        pack = self._pack
-        if pack is not None and pack.epoch == epoch:
-            return pack
-        from ..distributed.segment_shards import (SegmentShardSource,
+        from ..distributed.segment_shards import (BucketedShardPack,
+                                                  SegmentShardSource,
+                                                  build_bucketed_pack,
                                                   build_shard_pack)
+
+        def _read_state(pack):
+            return (pack.view() if isinstance(pack, BucketedShardPack)
+                    else pack)
+
+        with self._lock:
+            pack = self._pack
+            if pack is not None and pack.epoch == epoch:
+                return _read_state(pack)
         sources = []
         for seg in segments:
             xl, sl, gl = seg.live_points()
@@ -568,13 +642,18 @@ class SegmentManager:
                                               seg.t_min, seg.t_max))
         if not sources:
             return None
-        pack = build_shard_pack(sources, self.cfg.n_shards, epoch,
-                                mesh=self.shard_mesh)
+        if self.cfg.incremental_pack:
+            pack = build_bucketed_pack(
+                sources, self.cfg.n_shards, epoch, mesh=self.shard_mesh,
+                cap_multiple=self.cfg.pack_cap_multiple)
+        else:
+            pack = build_shard_pack(sources, self.cfg.n_shards, epoch,
+                                    mesh=self.shard_mesh)
         with self._lock:
             pack.sync_alive(self.alive)
             if self.epoch == epoch:
                 self._pack = pack
-        return pack
+            return _read_state(pack)
 
     def query(self, queries: np.ndarray, filt: Optional[Filter], k: int = 10,
               ef: int = 64, return_stats: bool = False, **kw):
@@ -587,7 +666,11 @@ class SegmentManager:
     def stats(self) -> dict:
         """Lifecycle counters and per-segment occupancy for dashboards."""
         with self._lock:
+            pack = self._pack
             return {
+                "pack_nbytes": 0 if pack is None else int(pack.nbytes),
+                "pack_buckets": (pack.bucket_stats()
+                                 if hasattr(pack, "bucket_stats") else {}),
                 "n_total": self.n_total,
                 "n_live": self.n_live,
                 "delta_live": self.delta.n_live,

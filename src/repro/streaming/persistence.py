@@ -40,6 +40,11 @@ The restored manager answers queries bit-for-bit identically to the
 pre-snapshot one: sealed-segment arrays round-trip exactly, the delta
 buffer preserves row order, and the shard-pack read path rebuilds from the
 same live points in the same segment order (``tests/test_persistence.py``).
+The size-bucketed device pack is *derived* state: it is never serialized —
+restore cold-builds the buckets lazily on the first sharded query from the
+restored segments' live points (the manifest's per-segment entries carry
+``n_live`` and the projected ``bucket_cap``, and the cfg blob carries the
+bucket geometry knobs, so a replica's device footprint is known up front).
 
 Fault injection: every critical transition calls ``fault_hook(point)`` when
 one is installed (``"wal.append"`` mid-frame, ``"segment.write"`` between
@@ -411,13 +416,25 @@ class StreamPersistence:
         version: missing segment artifacts are written, the mutable residue
         goes into ``state-<v>.npz``, the WAL rotates, and ``MANIFEST.json``
         swaps last — the single commit point.  Returns the manifest dict."""
+        from ..distributed.segment_shards import bucket_cap_for
         v = self.version + 1
         seg_entries = []
         for seg in manager.segments:
             art = self.stage_segment(seg)     # no-op when already staged
-            seg_entries.append({"seg_id": seg.seg_id, "dir": art,
-                                "t_min": seg.t_min, "t_max": seg.t_max,
-                                "n": seg.n, "n_live": seg.n_live})
+            entry = {"seg_id": seg.seg_id, "dir": art,
+                     "t_min": seg.t_min, "t_max": seg.t_max,
+                     "n": seg.n, "n_live": seg.n_live}
+            if manager.cfg.n_shards >= 1:
+                # pack state is derived (restore cold-builds the buckets
+                # lazily on the first sharded query), but the manifest
+                # records each segment's capacity bucket so operators can
+                # size a replica's device memory before restoring — the
+                # cfg blob already carries n_shards / pack_cap_multiple /
+                # incremental_pack, which is all the cold build needs
+                entry["bucket_cap"] = bucket_cap_for(
+                    seg.n_live, manager.cfg.n_shards,
+                    manager.cfg.pack_cap_multiple)
+            seg_entries.append(entry)
 
         state_name = f"state-{v:06d}.npz"
         state_bytes = _encode_state(manager)

@@ -1,4 +1,6 @@
-"""Mesh-sharded segment search: exactness, masking, pruning, manager path."""
+"""Mesh-sharded segment search: exactness, masking, pruning, manager path,
+and the size-bucketed incrementally maintained pack (parity vs a
+from-scratch build, bucket-capacity isolation, whole-block pruning)."""
 import numpy as np
 import pytest
 
@@ -7,13 +9,27 @@ from repro.core import (BoxFilter, ComposeFilter, CubeGraphConfig,
 from repro.core.workloads import (ground_truth, make_ball_filter,
                                   make_box_filter, make_dataset,
                                   make_polygon_filter, recall)
-from repro.distributed.segment_shards import (SegmentShardSource,
+from repro.distributed.segment_shards import (BucketedShardPack, PackView,
+                                              SegmentShardSource,
+                                              bucket_cap_for,
+                                              build_bucketed_pack,
                                               build_shard_pack,
-                                              make_shard_mesh, pack_search)
+                                              make_shard_mesh, pack_search,
+                                              pack_search_blocks)
 from repro.kernels import filtered_topk
 from repro.streaming import SegmentManager, StreamConfig
 
 IDX_CFG = CubeGraphConfig(n_layers=3, m_intra=10, m_cross=3)
+
+
+def _assert_same_topk(g_a, d_a, g_b, d_b):
+    """Distances must match bit-for-bit; gids wherever distances are
+    unique (equal-distance neighbors may legally reorder)."""
+    assert np.array_equal(d_a, d_b)
+    uniq = np.ones_like(g_a, bool)
+    uniq[:, 1:] &= d_a[:, 1:] != d_a[:, :-1]
+    uniq[:, :-1] &= d_a[:, :-1] != d_a[:, 1:]
+    assert np.array_equal(g_a[uniq], g_b[uniq])
 
 
 def _segmented_dataset(seed, n_segments, d=32, m=3):
@@ -148,13 +164,301 @@ def test_manager_sharded_path_matches_graph_path():
     r_sh, r_gr = recall(ids_sh, gt), recall(ids_gr, gt)
     assert r_sh >= r_gr
     assert r_sh >= 0.99                   # exact on sealed; delta also exact
-    # epoch bump (a new seal) invalidates and rebuilds the pack
+    # epoch bump (a new seal) delta-updates the cached pack in place —
+    # same device-resident object, advanced epoch, no full rebuild
     pack0 = mgr._pack
+    epoch0 = pack0.epoch
     mgr.ingest(x[:700], s[:700] * np.array([1, 1, 0]) + np.array([0, 0, 1.5]))
     f_old = ComposeFilter(BoxFilter(lo=np.zeros(3, np.float32),
                                     hi=np.ones(3, np.float32)),
                           IntervalFilter(dim=2, lo=np.float32(0.2),
                                          hi=np.float32(1.2)), "and")
     ids2, _ = mgr.query(q, f_old, k=10)   # window excludes the new batch
-    assert mgr._pack is not pack0
+    assert mgr._pack is pack0
+    assert mgr._pack.epoch > epoch0 and mgr._pack.epoch == mgr.epoch
     assert recall(ids2, gt) >= 0.99       # old-window results unchanged
+
+
+# ---------------------------------------------------------------------------
+# Size-bucketed incrementally maintained pack
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n_shards", [1, 3])
+def test_bucketed_pack_matches_legacy_cold(n_shards):
+    """A cold-built bucketed pack answers exactly like the legacy
+    monolithic pack for every filter kind (incl. the jnp fallback)."""
+    sources, x_all, s_all, g_all = _segmented_dataset(13, 4)
+    legacy = build_shard_pack(sources, n_shards=n_shards)
+    bucketed = build_bucketed_pack(sources, n_shards=n_shards)
+    rng = np.random.default_rng(13)
+    q = rng.normal(size=(6, 32)).astype(np.float32)
+    for filt in _filters(3, 13):
+        gl, dl = pack_search(legacy, q, filt, k=17)
+        gb, db = pack_search(bucketed, q, filt, k=17)
+        _assert_same_topk(gl, dl, gb, db)
+
+
+def test_bucketed_incremental_add_remove_reuse():
+    """Adds, removals, slot reuse, and deletes keep the incrementally
+    maintained pack bit-for-bit equal to a from-scratch build of the same
+    live segments."""
+    sources, _, _, g_all = _segmented_dataset(17, 5)
+    rng = np.random.default_rng(17)
+    q = rng.normal(size=(5, 32)).astype(np.float32)
+    pack = BucketedShardPack(n_shards=2, d=32, m=3)
+    for src in sources[:4]:
+        pack.add_segment(src)
+    # remove one segment, re-add another into the freed slot (reuse)
+    assert pack.remove_segment(sources[1].seg_id)
+    assert not pack.remove_segment(999)           # unknown id: no-op
+    pack.add_segment(sources[4])
+    live_sources = [sources[0], sources[2], sources[3], sources[4]]
+    fresh = build_shard_pack(live_sources, n_shards=2)
+    scratch = build_bucketed_pack(live_sources, n_shards=2)
+    for filt in (None, make_box_filter(3, 0.5, seed=17)):
+        gi, di = pack_search(pack, q, filt, k=11)
+        gf, df = pack_search(fresh, q, filt, k=11)
+        gs, ds = pack_search(scratch, q, filt, k=11)
+        _assert_same_topk(gi, di, gf, df)
+        _assert_same_topk(gi, di, gs, ds)
+    # deletes scatter PAD_META functionally and stay in lockstep
+    live_gids = np.concatenate([s.gids for s in live_sources])
+    dead = rng.choice(live_gids, 120, replace=False)
+    assert pack.mark_dead(dead) == fresh.mark_dead(dead) == 120
+    gi, di = pack_search(pack, q, None, k=11)
+    gf, df = pack_search(fresh, q, None, k=11)
+    _assert_same_topk(gi, di, gf, df)
+    assert not (set(gi[gi >= 0].tolist()) & set(dead.tolist()))
+
+
+def test_jumbo_segment_does_not_inflate_buckets():
+    """Regression for the padding tax: one jumbo post-compaction segment
+    must not inflate the padded capacity (or device bytes) of the buckets
+    holding the small segments."""
+    rng = np.random.default_rng(23)
+    sources, gid0 = [], 0
+    for sid, n in enumerate([300, 280, 330, 310, 4000]):
+        x = rng.normal(size=(n, 32)).astype(np.float32)
+        s = rng.uniform(size=(n, 3))
+        g = np.arange(gid0, gid0 + n, dtype=np.int64)
+        gid0 += n
+        sources.append(SegmentShardSource(sid, x, s, g,
+                                          float(s[:, 2].min()),
+                                          float(s[:, 2].max())))
+    smalls, jumbo = sources[:4], sources[4]
+    n_shards = 2
+    pack = build_bucketed_pack(smalls, n_shards=n_shards)
+    small_cap = bucket_cap_for(330, n_shards)
+    assert sorted(pack.buckets) == [small_cap]
+    # the jumbo lands in its own bucket; the small bucket is untouched
+    pack.add_segment(jumbo)
+    jumbo_cap = bucket_cap_for(4000, n_shards)
+    assert sorted(pack.buckets) == sorted({small_cap, jumbo_cap})
+    assert jumbo_cap > small_cap
+    assert pack.buckets[small_cap].cap == small_cap
+    # per-bucket padding bound: cap <= 2x the tile-aligned largest shard
+    for srcs, cap in ((smalls, small_cap), ([jumbo], jumbo_cap)):
+        largest = max(-(-len(s.gids) // n_shards) for s in srcs)
+        aligned = -(-largest // 256) * 256
+        assert cap <= 2 * aligned
+    # the monolithic layout pays the tax on every row; the buckets don't
+    legacy = build_shard_pack(sources, n_shards=n_shards)
+    assert legacy.cap == jumbo_cap
+    assert pack.nbytes < legacy.nbytes
+    # and the answers are still identical
+    q = rng.normal(size=(4, 32)).astype(np.float32)
+    gi, di = pack_search(pack, q, None, k=9)
+    gl, dl = pack_search(legacy, q, None, k=9)
+    _assert_same_topk(gi, di, gl, dl)
+
+
+def test_host_topk_deterministic_under_block_order():
+    """The exact merge's output is invariant to candidate order — finite
+    distance ties at the argpartition boundary resolve by gid, inf padding
+    collapses to -1."""
+    import itertools
+
+    from repro.distributed.segment_shards import host_topk
+    d0 = np.array([1.0, 2.0, 2.0, 2.0, 3.0, np.inf], np.float32)
+    g0 = np.array([50, 30, 10, 20, 5, -1], np.int64)
+    ref = None
+    for perm in itertools.permutations(range(6)):
+        gi, di = host_topk(g0[list(perm)][None], d0[list(perm)][None], 3)
+        if ref is None:
+            ref = (gi, di)
+        assert np.array_equal(gi, ref[0]) and np.array_equal(di, ref[1])
+    assert ref[0].tolist() == [[50, 10, 20]]      # boundary tie -> min gids
+    assert ref[1].tolist() == [[1.0, 2.0, 2.0]]
+    # rows narrower than k pad with -1/inf
+    gi, di = host_topk(g0[None, :2], d0[None, :2], 5)
+    assert gi.shape == (1, 5) and gi[0, 2:].tolist() == [-1, -1, -1]
+
+
+def test_retired_bucket_releases_device_memory():
+    """Removing a bucket's last segment frees the whole capacity class —
+    a retired jumbo must not pin device memory at its historical peak."""
+    sources, _, _, _ = _segmented_dataset(37, 2)
+    rng = np.random.default_rng(37)
+    jumbo = SegmentShardSource(
+        99, rng.normal(size=(5000, 32)).astype(np.float32),
+        rng.uniform(size=(5000, 3)),
+        np.arange(10_000, 15_000, dtype=np.int64), 0.0, 1.0)
+    pack = build_bucketed_pack(sources, n_shards=2)
+    base_nbytes = pack.nbytes
+    pack.add_segment(jumbo)
+    jumbo_cap = bucket_cap_for(5000, 2)
+    assert jumbo_cap in pack.buckets and pack.nbytes > base_nbytes
+    view = pack.view()                    # in-flight query snapshot
+    assert pack.remove_segment(99)
+    assert jumbo_cap not in pack.buckets  # capacity class released
+    assert pack.nbytes == base_nbytes
+    # the captured view still answers from its own references
+    q = rng.normal(size=(2, 32)).astype(np.float32)
+    gi, _ = pack_search(view, q, None, k=5)
+    assert (gi >= 10_000).any()
+    # and a new jumbo re-creates the class from scratch
+    pack.add_segment(jumbo)
+    assert jumbo_cap in pack.buckets
+    gi2, _ = pack_search(pack, q, None, k=5)
+    assert (gi2 >= 10_000).any()
+
+
+def test_bucketed_whole_block_pruning():
+    """Temporal pruning skips entire bucket device blocks: a window that
+    misses a bucket's segments produces no candidate block for it."""
+    rng = np.random.default_rng(29)
+    mk = lambda sid, n, t0: SegmentShardSource(
+        sid, rng.normal(size=(n, 32)).astype(np.float32),
+        np.concatenate([rng.uniform(size=(n, 2)),
+                        np.full((n, 1), t0)], axis=1),
+        np.arange(sid * 10000, sid * 10000 + n, dtype=np.int64), t0, t0 + 0.1)
+    pack = build_bucketed_pack([mk(0, 200, 0.0), mk(1, 3000, 5.0)],
+                               n_shards=2)
+    q = rng.normal(size=(3, 32)).astype(np.float32)
+    view = pack.view()
+    assert isinstance(view, PackView) and len(view.buckets) == 2
+    assert len(pack_search_blocks(view, q, None, 5)) == 2
+    # window hits only the small bucket -> one dispatch, one block
+    blocks = pack_search_blocks(view, q, None, 5, t_lo=-1.0, t_hi=1.0)
+    assert len(blocks) == 1
+    assert set(blocks[0][0][blocks[0][0] >= 0].tolist()) <= set(range(200))
+    # window missing everything -> zero dispatches and -1/inf padding
+    assert pack_search_blocks(view, q, None, 5, t_lo=9.0, t_hi=10.0) == []
+    gi, di = pack_search(view, q, None, k=5, t_lo=9.0, t_hi=10.0)
+    assert np.all(gi == -1) and np.all(np.isinf(di))
+
+
+def test_bucketed_pack_on_mesh_matches():
+    """Mesh-placed bucketed pack answers identically to the mesh-placed
+    legacy pack, including after functional dead-masking."""
+    sources, x_all, s_all, g_all = _segmented_dataset(31, 3)
+    mesh = make_shard_mesh()
+    n_shards = 2 * mesh.devices.size
+    legacy = build_shard_pack(sources, n_shards=n_shards, mesh=mesh)
+    pack = build_bucketed_pack(sources, n_shards=n_shards, mesh=mesh)
+    # every bucket block must stay shard-axis partitionable on the mesh —
+    # _init_slots aligns allocation even when n_shards doesn't divide the
+    # device count (checked with n_shards=3 below)
+    for p in (pack, build_bucketed_pack(sources, n_shards=3, mesh=mesh)):
+        for b in p.buckets.values():
+            assert b.n_rows % mesh.devices.size == 0
+    rng = np.random.default_rng(31)
+    q = rng.normal(size=(6, 32)).astype(np.float32)
+    gi, di = pack_search(pack, q, None, k=12)
+    gl, dl = pack_search(legacy, q, None, k=12)
+    _assert_same_topk(gi, di, gl, dl)
+    dead = g_all[rng.choice(len(g_all), 150, replace=False)]
+    assert pack.mark_dead(dead) == 150
+    gi1, _ = pack_search(pack, q, None, k=12)
+    assert not (set(gi1[gi1 >= 0].tolist()) & set(dead.tolist()))
+
+
+def _apply_stream_ops(mgr, rng, ops, d=24):
+    """Drive one manager through an interleaving of lifecycle ops."""
+    t = getattr(mgr, "_test_t", 0.0)
+    for op in ops:
+        if op == 0 or mgr.n_total == 0:           # ingest
+            nb = int(rng.integers(40, 150))
+            x = rng.normal(size=(nb, d)).astype(np.float32)
+            s = rng.uniform(size=(nb, 3))
+            s[:, 2] = t + np.linspace(0.0, 0.05, nb)
+            t += 0.25
+            mgr.ingest(x, s)
+        elif op == 1:                             # delete
+            g = rng.integers(0, mgr.n_total, size=25)
+            mgr.delete(g)
+        elif op == 2:                             # seal
+            mgr.seal()
+        elif op == 3:                             # compact (merges + GC)
+            mgr.compact()
+        elif op == 4:                             # expire (finite ttl)
+            mgr.expire()
+    mgr._test_t = t
+
+
+def _check_incremental_matches_from_scratch(seed, n_shards, ops):
+    """Shared property body: after an arbitrary interleaving of ingest /
+    delete / seal / compact / expire, the incrementally maintained pack
+    answers bit-for-bit (dists; gids up to equal-distance ties) identically
+    to a from-scratch ``build_shard_pack`` — through the raw pack search
+    AND the full fan-out query path, for n_shards = 1 and > 1."""
+    rng = np.random.default_rng(seed)
+    cfg = StreamConfig(time_dim=2, seal_max_points=120, n_shards=n_shards,
+                       compact_max_segments=3, ttl=1.5, index_cfg=IDX_CFG)
+    mgr = SegmentManager(24, 3, cfg)
+    _apply_stream_ops(mgr, rng, [0, 2])           # one sealed segment
+    q = rng.normal(size=(4, 24)).astype(np.float32)
+    mgr.query(q, None, k=5)                       # cold-build the pack
+    pack0 = mgr._pack
+    assert isinstance(pack0, BucketedShardPack)
+    _apply_stream_ops(mgr, rng, ops)
+    mgr.seal()
+    # the pack must have been maintained by deltas, never invalidated
+    if mgr._pack is not None:
+        assert mgr._pack is pack0
+        assert mgr._pack.epoch == mgr.epoch
+    epoch, segments, _ = mgr.snapshot()
+    live = [g for g in segments if g.n_live > 0]
+    filters = [None, make_box_filter(3, 0.6, seed=seed),
+               IntervalFilter(dim=2, lo=np.float32(0.2))]
+    if live:
+        view = mgr.shard_pack(epoch, live)
+        assert isinstance(view, PackView) and view.epoch == epoch
+        sources = [SegmentShardSource(g.seg_id, *g.live_points(),
+                                      g.t_min, g.t_max) for g in live]
+        fresh = build_shard_pack(sources, n_shards)
+        for filt in filters:
+            gi, di = pack_search(view, q, filt, k=15)
+            gf, df = pack_search(fresh, q, filt, k=15)
+            _assert_same_topk(gi, di, gf, df)
+    # fan-out parity: the full query path (delta + buckets + liveness)
+    # after a forced cold rebuild must reproduce the incremental answer
+    for filt in filters:
+        gi, di = mgr.query(q, filt, k=15)
+        mgr._pack = None
+        gr, dr = mgr.query(q, filt, k=15)
+        _assert_same_topk(gi, di, gr, dr)
+
+
+@pytest.mark.parametrize("seed,n_shards,ops", [
+    (101, 1, [0, 1, 2, 0, 3, 1, 4]),     # fan-out path, all op kinds
+    (202, 3, [0, 2, 1, 3, 0, 0, 4, 2]),  # sharded path, expiry + merges
+    (303, 3, [1, 0, 3, 3, 2, 1]),        # repeated compaction, GC rewrite
+])
+def test_incremental_pack_matches_from_scratch(seed, n_shards, ops):
+    """Deterministic interleavings of the parity property (always runs;
+    the hypothesis variant below widens the search space when available)."""
+    _check_incremental_matches_from_scratch(seed, n_shards, ops)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 10_000), n_shards=st.sampled_from([1, 3]),
+           ops=st.lists(st.integers(0, 4), min_size=3, max_size=8))
+    def test_incremental_pack_matches_from_scratch_hypothesis(seed, n_shards,
+                                                              ops):
+        """Same parity property, hypothesis-driven op interleavings."""
+        _check_incremental_matches_from_scratch(seed, n_shards, ops)
+except ImportError:                      # pragma: no cover - optional dep
+    pass
