@@ -1,0 +1,104 @@
+"""Exp-13: quantized sealed-segment read path — int8 codes + exact fp32
+rerank vs the fp32 scan.
+
+Drives the same ingest stream through two managers that differ only in
+``StreamConfig(quantize=)``:
+
+  * device bytes held by the sealed-segment pack (the HBM budget that caps
+    resident corpus size) for the fp32 blocks vs the int8 code blocks,
+  * steady-state query latency of both paths (windowed filter + no-filter),
+  * recall@10 of the quantized two-stage path against brute-force fp32
+    ground truth (the fp32 path is exact by construction and is asserted
+    so),
+  * a sweep over ``rerank_multiple`` showing the over-fetch / recall knee.
+
+The fp32 baseline's keys are ``fp32_``-prefixed so the BENCH_streaming.json
+digest summarizes only the production quantized path (same convention as
+exp12's ``rebuild_`` prefix).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (BoxFilter, ComposeFilter, CubeGraphConfig,
+                        IntervalFilter)
+from repro.core.workloads import ground_truth, make_dataset, recall
+from repro.streaming import SegmentManager, StreamConfig
+
+from .common import BENCH_D, BENCH_N, BENCH_Q, csv_row, record, timed_queries
+
+CFG = CubeGraphConfig(n_layers=3, m_intra=12, m_cross=4)
+
+
+def _window(t_lo, t_hi):
+    return ComposeFilter(
+        BoxFilter(lo=np.zeros(3, np.float32), hi=np.ones(3, np.float32)),
+        IntervalFilter(dim=2, lo=np.float32(t_lo), hi=np.float32(t_hi)),
+        "and")
+
+
+def run():
+    n = max(BENCH_N, 8000)
+    d = BENCH_D
+    x, s = make_dataset(n, d, 3, seed=51)
+    s[:, 2] = np.arange(n) / n
+    rng = np.random.default_rng(52)
+    q = x[rng.integers(0, n, BENCH_Q)] \
+        + 0.05 * rng.normal(size=(BENCH_Q, d)).astype(np.float32)
+    f = _window(0.2, 0.9)
+    gt_f, _ = ground_truth(x, s, q, f, 10)
+    gt_n, _ = ground_truth(x, s, q, None, 10)
+
+    out = {"n_points": n, "d": d, "modes": {}}
+    managers = {}
+    for mode, quantize in (("fp32", None), ("int8", "int8")):
+        tag = "fp32_" if quantize is None else ""
+        mgr = SegmentManager(d, 3, StreamConfig(
+            time_dim=2, seal_max_points=2048, n_shards=2,
+            quantize=quantize, rerank_multiple=4, index_cfg=CFG))
+        mgr.ingest(x, s)
+        managers[mode] = mgr
+        dt_f, ids_f = timed_queries(lambda: mgr.query(q, f, k=10)[0], reps=5)
+        dt_n, ids_n = timed_queries(
+            lambda: mgr.query(q, None, k=10)[0], reps=5)
+        st = mgr.stats()
+        row = {
+            tag + "us_per_query": round(dt_f / BENCH_Q * 1e6, 1),
+            tag + "us_per_query_nofilter": round(dt_n / BENCH_Q * 1e6, 1),
+            tag + "recall_at_10": round(min(recall(ids_f, gt_f),
+                                            recall(ids_n, gt_n)), 4),
+            tag + "pack_nbytes": st["pack_nbytes"],
+        }
+        out["modes"][mode] = row
+        csv_row(f"exp13/{mode}", dt_f * 1e6,
+                f"recall={row[tag + 'recall_at_10']};"
+                f"pack_nbytes={row[tag + 'pack_nbytes']}")
+
+    fp, i8 = out["modes"]["fp32"], out["modes"]["int8"]
+    out["device_bytes_ratio"] = round(
+        fp["fp32_pack_nbytes"] / max(i8["pack_nbytes"], 1), 2)
+    out["latency_ratio"] = round(
+        fp["fp32_us_per_query"] / max(i8["us_per_query"], 1e-9), 3)
+
+    # over-fetch knee: recall@10 as the rerank multiple shrinks
+    sweep = []
+    mgr = managers["int8"]
+    base_cfg = mgr.cfg
+    for rm in (1, 2, 4, 8):
+        import dataclasses
+        mgr.cfg = dataclasses.replace(base_cfg, rerank_multiple=rm)
+        ids, _ = mgr.query(q, f, k=10)
+        sweep.append({"rerank_multiple": rm,
+                      "sweep_recall": round(recall(ids, gt_f), 4)})
+    mgr.cfg = base_cfg
+    out["rerank_sweep"] = sweep
+    csv_row("exp13/summary", 0.0,
+            f"device_bytes_ratio={out['device_bytes_ratio']}x;"
+            f"latency_ratio={out['latency_ratio']}x;"
+            f"recall={i8['recall_at_10']}")
+    record("exp13_quantized_scan", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

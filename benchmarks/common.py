@@ -75,7 +75,7 @@ def csv_row(name: str, us_per_call: float, derived: str):
 
 
 # -- machine-readable perf trajectory (BENCH_streaming.json) -----------------
-STREAMING_SECTIONS = ("exp9_", "exp10_", "exp11_", "exp12_")
+STREAMING_SECTIONS = ("exp9_", "exp10_", "exp11_", "exp12_", "exp13_")
 _SUMMARY_LATENCY_KEYS = {   # payload key -> (scale to µs, canonical name)
     "us_per_query": (1.0, "query_us"),
     "first_query_ms_after_seal": (1e3, "first_query_after_seal_us"),
@@ -83,6 +83,11 @@ _SUMMARY_LATENCY_KEYS = {   # payload key -> (scale to µs, canonical name)
     "restored_first_query_ms": (1e3, "restored_first_query_us"),
 }
 _SUMMARY_BYTES_KEYS = ("pack_nbytes",)
+# recall of the *production* path only — baseline keys are prefixed
+# (fp32_..., rebuild_...) and sweep keys renamed, so they stay out
+_SUMMARY_RECALL_KEYS = ("recall", "recall_at_10")
+# dimensionless ratios reported once per section (kept as-is, not medianed)
+_SUMMARY_RATIO_KEYS = ("device_bytes_ratio",)
 
 
 def _collect(node, keys, out):
@@ -101,8 +106,9 @@ def _collect(node, keys, out):
 def streaming_summary(results: Dict[str, object]) -> Dict[str, dict]:
     """Compress the streaming-related sections of ``results`` into one
     machine-readable row each — a **per-metric** median (µs) for every
-    latency key the section recorded, plus peak pack bytes on device — so
-    the perf trajectory is diffable across PRs (``BENCH_streaming.json``).
+    latency key the section recorded, the median recall of the production
+    path, peak pack bytes on device, and any device-bytes ratio — so the
+    perf trajectory is diffable across PRs (``BENCH_streaming.json``).
     Medians are kept per key (steady-state ``us_per_query`` vs
     compile-laden ``first_query_ms_after_seal`` differ by orders of
     magnitude); pooling them would make the digest swing with sample
@@ -116,15 +122,26 @@ def streaming_summary(results: Dict[str, object]) -> Dict[str, dict]:
         _collect(payload, _SUMMARY_LATENCY_KEYS, lat)
         nbytes: Dict[str, list] = {}
         _collect(payload, set(_SUMMARY_BYTES_KEYS), nbytes)
+        rec: Dict[str, list] = {}
+        _collect(payload, set(_SUMMARY_RECALL_KEYS), rec)
+        ratios: Dict[str, list] = {}
+        _collect(payload, set(_SUMMARY_RATIO_KEYS), ratios)
         row: Dict[str, object] = {}
         for key in sorted(lat):
             scale, name = _SUMMARY_LATENCY_KEYS[key]
             scaled = [v * scale for v in lat[key]]
             row[f"median_{name}"] = round(statistics.median(scaled), 1)
             row[f"n_{name}_samples"] = len(scaled)
+        if rec:
+            vals = [v for vs in rec.values() for v in vs]
+            row["median_recall"] = round(statistics.median(vals), 4)
+            row["n_recall_samples"] = len(vals)
         if nbytes:
             row["pack_nbytes"] = int(max(v for vs in nbytes.values()
                                          for v in vs))
+        for key in _SUMMARY_RATIO_KEYS:
+            if key in ratios:
+                row[key] = max(ratios[key])
         if row:
             out[section] = row
     return out

@@ -40,6 +40,18 @@ kernel would for the same point, each true global top-k member is by
 definition inside its own shard's top-k, and global ids are disjoint across
 shards — so concatenating the per-shard (and per-bucket) lists and taking
 the global top-k reproduces the single-device result bit-for-bit.
+
+Quantized read path (``quantize="int8"``): a bucketed pack can instead hold
+**int8 segment codes** in a transposed layout (``[rows, dq, cap]`` codes +
+``[rows, mq, cap]`` metadata-with-norms, see ``repro.kernels.quant_topk``)
+— ~4x fewer vector bytes and ~16x fewer metadata bytes on device than the
+fp32 blocks.  The per-segment scales ride the same functional delta
+protocol, the scan over-fetches ``rerank_multiple * k`` candidates per
+bucket with asymmetric (fp32 query × int8 code) distances, and the caller
+reranks the union exactly at fp32 (``repro.quant.rerank``) before the
+standard ``(dist, gid)`` merge.  With ``quantize=None`` nothing changes:
+the fp32 blocks and kernel path are byte-for-byte the pre-quantization
+ones.
 """
 from __future__ import annotations
 
@@ -54,7 +66,8 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..core import Filter
-from ..kernels import PAD_META, next_pow2, sharded_filtered_topk
+from ..kernels import (PAD_META, next_pow2, quant_meta_rows, round_up,
+                       sharded_filtered_topk, sharded_quant_filtered_topk)
 
 __all__ = ["BucketedShardPack", "PackView", "SegmentShardSource",
            "ShardPack", "bucket_cap_for", "build_bucketed_pack",
@@ -67,7 +80,13 @@ _MPAD = 128                      # metadata lane padding (kernel layout)
 @dataclasses.dataclass(frozen=True)
 class SegmentShardSource:
     """One segment's live points, ready to be sharded (plain arrays so this
-    module stays import-independent of ``repro.streaming``)."""
+    module stays import-independent of ``repro.streaming``).
+
+    ``codes`` / ``scales`` / ``xsq`` carry the segment's int8 codec payload
+    (rows parallel to ``x``) when the owner runs the quantized read path;
+    a quantized pack falls back to encoding on the fly when they are
+    absent (e.g. sources rebuilt from a pre-quantization snapshot).
+    """
 
     seg_id: int
     x: np.ndarray                # [n, d] fp32 live vectors
@@ -75,6 +94,9 @@ class SegmentShardSource:
     gids: np.ndarray             # [n] int64 global ids
     t_min: float
     t_max: float
+    codes: Optional[np.ndarray] = None    # [n, d] int8 segment codes
+    scales: Optional[np.ndarray] = None   # [d] fp32 per-dim scales
+    xsq: Optional[np.ndarray] = None      # [n] fp32 dequantized sq. norms
 
 
 def make_shard_mesh(n_devices: Optional[int] = None) -> Mesh:
@@ -89,10 +111,6 @@ def make_shard_mesh(n_devices: Optional[int] = None) -> Mesh:
     n = len(devs) if n_devices is None else min(int(n_devices), len(devs))
     return Mesh(np.asarray(devs[:n]).reshape(n), ("shard",),
                 **mesh_compat_kwargs(1))
-
-
-def _round_up(v: int, mult: int) -> int:
-    return ((max(v, 1) + mult - 1) // mult) * mult
 
 
 @dataclasses.dataclass
@@ -196,14 +214,14 @@ def build_shard_pack(sources: Sequence[SegmentShardSource], n_shards: int,
         raise ValueError("build_shard_pack needs at least one segment")
     m = sources[0].s.shape[1]
     d = sources[0].x.shape[1]
-    dpad = _round_up(d, 128)
+    dpad = round_up(d, 128)
     per_row: List[Tuple[int, np.ndarray, SegmentShardSource]] = []
     for src in sources:
         order = np.arange(len(src.gids))
         for sh in range(n_shards):
             per_row.append((src.seg_id, order[sh::n_shards], src))
     g = len(per_row)
-    cap = _round_up(max(len(idx) for _, idx, _ in per_row), cap_multiple)
+    cap = round_up(max(len(idx) for _, idx, _ in per_row), cap_multiple)
     x = np.zeros((g, cap, dpad), np.float32)
     s = np.full((g, cap, _MPAD), PAD_META, np.float32)
     gid = np.full((g, cap), -1, np.int32)
@@ -272,6 +290,15 @@ def _mask_meta(s, rows, cols):
     return s.at[rows, cols, :].set(PAD_META)
 
 
+@jax.jit
+def _mask_meta_t(st, rows, cols):
+    """Transposed-layout sibling of :func:`_mask_meta`: sets every metadata
+    sublane (including the xsq row) of the quantized block's columns
+    ``(rows[i], :, cols[i])`` to ``PAD_META``, so every predicate —
+    including ``filt=None`` — rejects the point."""
+    return st.at[rows, :, cols].set(PAD_META)
+
+
 @dataclasses.dataclass
 class _SegEntry:
     """Where one segment's points live inside the pack (host bookkeeping
@@ -288,25 +315,37 @@ class _SegEntry:
 @dataclasses.dataclass
 class _Bucket:
     """One capacity class: a padded ``[rows, cap, ·]`` device block whose
-    rows are allocated in slots of ``n_shards`` consecutive rows."""
+    rows are allocated in slots of ``n_shards`` consecutive rows.
+
+    Exactly one of the two layouts is populated: the fp32 blocks
+    (``x`` / ``s``) or the quantized transposed blocks (``codes`` / ``st``
+    / ``scales``) — never both, which is where the quantized pack's device
+    bytes go from ~1 KiB/point to ~70 B/point.
+    """
 
     cap: int
-    x: jnp.ndarray               # [rows, cap, dpad]
-    s: jnp.ndarray               # [rows, cap, MPAD]
     gids: jnp.ndarray            # [rows, cap] int32 (-1 padding)
     seg_ids: np.ndarray          # [rows] int64 owning segment (-1 = free)
     t_min: np.ndarray            # [rows] owning segment's span (+inf free)
     t_max: np.ndarray            # [rows] (-inf free)
     free_slots: List[int]
+    x: Optional[jnp.ndarray] = None       # [rows, cap, dpad] fp32
+    s: Optional[jnp.ndarray] = None       # [rows, cap, MPAD] fp32
+    codes: Optional[jnp.ndarray] = None   # [rows, dq, cap] int8
+    st: Optional[jnp.ndarray] = None      # [rows, mq, cap] fp32 (+xsq row)
+    scales: Optional[jnp.ndarray] = None  # [rows, dq] fp32 per-dim scales
 
     @property
     def n_rows(self) -> int:
         """Allocated rows (live + free) in this bucket's block."""
-        return int(self.x.shape[0])
+        return int(self.gids.shape[0])
 
     @property
     def nbytes(self) -> int:
         """Device bytes held by this bucket's block."""
+        if self.codes is not None:
+            return int(self.codes.size + (self.st.size + self.scales.size
+                                          + self.gids.size) * 4)
         return int((self.x.size + self.s.size + self.gids.size) * 4)
 
 
@@ -316,15 +355,24 @@ class BucketView:
 
     The ``jnp`` arrays are captured by reference (functional updates never
     mutate them); the host-side row metadata is copied because delta
-    application edits it in place."""
+    application edits it in place.  Quantized buckets expose
+    ``codes`` / ``st`` / ``scales`` instead of ``x`` / ``s``."""
 
     cap: int
-    x: jnp.ndarray
-    s: jnp.ndarray
     gids: jnp.ndarray
     seg_ids: np.ndarray
     t_min: np.ndarray
     t_max: np.ndarray
+    x: Optional[jnp.ndarray] = None
+    s: Optional[jnp.ndarray] = None
+    codes: Optional[jnp.ndarray] = None
+    st: Optional[jnp.ndarray] = None
+    scales: Optional[jnp.ndarray] = None
+
+    @property
+    def quantized(self) -> bool:
+        """Whether this bucket holds int8 codes instead of fp32 blocks."""
+        return self.codes is not None
 
     def active_rows(self, t_lo: float, t_hi: float) -> np.ndarray:
         """[rows] bool — allocated rows whose segment span overlaps the
@@ -344,11 +392,12 @@ class PackView:
     m: int
     buckets: Tuple[BucketView, ...]
     nbytes: int
+    quantize: Optional[str] = None
 
     @property
     def n_rows(self) -> int:
         """Total allocated pack rows across buckets."""
-        return sum(b.x.shape[0] for b in self.buckets)
+        return sum(b.gids.shape[0] for b in self.buckets)
 
 
 class BucketedShardPack:
@@ -366,16 +415,24 @@ class BucketedShardPack:
     """
 
     def __init__(self, n_shards: int, d: int, m: int, epoch: int = 0,
-                 mesh: Optional[Mesh] = None, cap_multiple: int = 256):
+                 mesh: Optional[Mesh] = None, cap_multiple: int = 256,
+                 quantize: Optional[str] = None):
         self.n_shards = max(int(n_shards), 1)
         self.d = int(d)
         self.m = int(m)
-        self.dpad = _round_up(d, 128)
+        self.dpad = round_up(d, 128)
+        self.dq = round_up(d, 32)           # int8 code sublane padding
+        self.mq = quant_meta_rows(m)         # meta sublanes (+1 xsq row)
         self.epoch = int(epoch)
         self.mesh = mesh
         self.cap_multiple = max(int(cap_multiple), 8)
+        self.quantize = quantize
         self.buckets: Dict[int, _Bucket] = {}
         self._entries: Dict[int, _SegEntry] = {}
+        # block shapes created since the last drain — the manager hands
+        # them to kernels.ops.warm_sharded_shapes so a grown bucket's
+        # dispatch is pre-traced off the query path
+        self._new_shapes: List[dict] = []
 
     # -- geometry ------------------------------------------------------
     @property
@@ -416,11 +473,40 @@ class BucketedShardPack:
         return arr
 
     def _new_block(self, rows: int, cap: int):
-        """Fresh zero/PAD device arrays for ``rows`` bucket rows."""
+        """Fresh zero/PAD device arrays for ``rows`` bucket rows, in the
+        layout the pack's mode needs (fp32 blocks or int8 code blocks)."""
+        g = self._place(jnp.full((rows, cap), -1, jnp.int32))
+        if self.quantize:
+            c = self._place(jnp.zeros((rows, self.dq, cap), jnp.int8))
+            st = self._place(jnp.full((rows, self.mq, cap), PAD_META,
+                                      jnp.float32))
+            sc = self._place(jnp.zeros((rows, self.dq), jnp.float32))
+            return dict(codes=c, st=st, scales=sc, gids=g)
         x = self._place(jnp.zeros((rows, cap, self.dpad), jnp.float32))
         s = self._place(jnp.full((rows, cap, _MPAD), PAD_META, jnp.float32))
-        g = self._place(jnp.full((rows, cap), -1, jnp.int32))
-        return x, s, g
+        return dict(x=x, s=s, gids=g)
+
+    def _note_shape(self, rows: int, cap: int) -> None:
+        """Record a freshly created block geometry for compile warming.
+        The mesh rides along so the warm-up's zero blocks are placed with
+        the same sharding as the real blocks — jit caches per input
+        sharding, so an unsharded warm would not pre-compile the
+        mesh-placed dispatch."""
+        if self.quantize:
+            self._new_shapes.append({"mode": "int8", "rows": rows,
+                                     "cap": cap, "dq": self.dq,
+                                     "mq": self.mq, "mesh": self.mesh})
+        else:
+            self._new_shapes.append({"mode": "fp32", "rows": rows,
+                                     "cap": cap, "dpad": self.dpad,
+                                     "mesh": self.mesh})
+
+    def drain_warm_shapes(self) -> List[dict]:
+        """Pop the block geometries created since the last drain (call
+        under the owner's lock; feed to
+        ``kernels.ops.warm_sharded_shapes`` off the query path)."""
+        out, self._new_shapes = self._new_shapes, []
+        return out
 
     def _init_slots(self) -> int:
         """Slot count for a fresh bucket block: the smallest number whose
@@ -437,13 +523,14 @@ class BucketedShardPack:
         if b is None:
             slots = self._init_slots()
             rows = slots * self.n_shards
-            x, s, g = self._new_block(rows, cap)
-            b = _Bucket(cap, x, s, g,
-                        np.full(rows, -1, np.int64),
-                        np.full(rows, np.inf, np.float64),
-                        np.full(rows, -np.inf, np.float64),
-                        list(range(slots)))
+            b = _Bucket(cap,
+                        seg_ids=np.full(rows, -1, np.int64),
+                        t_min=np.full(rows, np.inf, np.float64),
+                        t_max=np.full(rows, -np.inf, np.float64),
+                        free_slots=list(range(slots)),
+                        **self._new_block(rows, cap))
             self.buckets[cap] = b
+            self._note_shape(rows, cap)
         return b
 
     def _alloc_slot(self, b: _Bucket) -> int:
@@ -452,10 +539,10 @@ class BucketedShardPack:
         if not b.free_slots:
             old_slots = b.n_rows // self.n_shards
             add_slots = max(old_slots, 1)
-            ax, as_, ag = self._new_block(add_slots * self.n_shards, b.cap)
-            b.x = self._place(jnp.concatenate([b.x, ax]))
-            b.s = self._place(jnp.concatenate([b.s, as_]))
-            b.gids = self._place(jnp.concatenate([b.gids, ag]))
+            add = self._new_block(add_slots * self.n_shards, b.cap)
+            for name, arr in add.items():
+                grown = jnp.concatenate([getattr(b, name), arr])
+                setattr(b, name, self._place(grown))
             add_rows = add_slots * self.n_shards
             b.seg_ids = np.concatenate(
                 [b.seg_ids, np.full(add_rows, -1, np.int64)])
@@ -464,10 +551,53 @@ class BucketedShardPack:
             b.t_max = np.concatenate(
                 [b.t_max, np.full(add_rows, -np.inf, np.float64)])
             b.free_slots.extend(range(old_slots, old_slots + add_slots))
+            self._note_shape(b.n_rows, b.cap)
         b.free_slots.sort()
         return b.free_slots.pop(0)
 
     # -- delta protocol ------------------------------------------------
+    def _stage_fp32(self, src: SegmentShardSource, cap: int):
+        """Host-stage one segment's fp32 rows as ``[n_shards, cap, ·]``
+        blocks ready for the delta write."""
+        n = len(src.gids)
+        d = src.x.shape[1]
+        xb = np.zeros((self.n_shards, cap, self.dpad), np.float32)
+        sb = np.full((self.n_shards, cap, _MPAD), PAD_META, np.float32)
+        for sh in range(self.n_shards):
+            idx = np.arange(sh, n, self.n_shards)
+            nn = len(idx)
+            xb[sh, :nn, :d] = src.x[idx]
+            sb[sh, :nn, :] = 0.0
+            sb[sh, :nn, : self.m] = src.s[idx]
+        return dict(x=xb, s=sb)
+
+    def _stage_quant(self, src: SegmentShardSource, cap: int):
+        """Host-stage one segment's int8 codes in the transposed quant
+        layout (codes ``[n_shards, dq, cap]``, metadata+norms
+        ``[n_shards, mq, cap]``, per-row scales).  Uses the segment's
+        sealed codec payload when present; otherwise encodes on the fly
+        (pre-quantization snapshot restored into a quantized config)."""
+        from ..quant import encode_segment
+        n = len(src.gids)
+        d = src.x.shape[1]
+        if src.codes is not None:
+            codes, scales, xsq = src.codes, src.scales, src.xsq
+        else:
+            q = encode_segment(src.x, self.quantize)
+            codes, scales, xsq = q.codes, q.scales, q.xsq
+        cb = np.zeros((self.n_shards, self.dq, cap), np.int8)
+        stb = np.full((self.n_shards, self.mq, cap), PAD_META, np.float32)
+        scb = np.zeros((self.n_shards, self.dq), np.float32)
+        scb[:, :d] = np.asarray(scales, np.float32)[None, :]
+        for sh in range(self.n_shards):
+            idx = np.arange(sh, n, self.n_shards)
+            nn = len(idx)
+            cb[sh, :d, :nn] = codes[idx].T
+            stb[sh, :, :nn] = 0.0
+            stb[sh, : self.m, :nn] = src.s[idx].T
+            stb[sh, self.mq - 1, :nn] = xsq[idx]
+        return dict(codes=cb, st=stb, scales=scb)
+
     def add_segment(self, src: SegmentShardSource) -> None:
         """Append one segment's live points into its capacity bucket:
         O(segment) host staging + one ``dynamic_update_slice`` per device
@@ -481,21 +611,17 @@ class BucketedShardPack:
         b = self._bucket_for(cap)
         slot = self._alloc_slot(b)
         row0 = slot * self.n_shards
-        d = src.x.shape[1]
-        xb = np.zeros((self.n_shards, cap, self.dpad), np.float32)
-        sb = np.full((self.n_shards, cap, _MPAD), PAD_META, np.float32)
+        staged = (self._stage_quant(src, cap) if self.quantize
+                  else self._stage_fp32(src, cap))
         gb = np.full((self.n_shards, cap), -1, np.int32)
         for sh in range(self.n_shards):
             idx = np.arange(sh, n, self.n_shards)
-            nn = len(idx)
-            xb[sh, :nn, :d] = src.x[idx]
-            sb[sh, :nn, :] = 0.0
-            sb[sh, :nn, : self.m] = src.s[idx]
-            gb[sh, :nn] = src.gids[idx]
+            gb[sh, : len(idx)] = src.gids[idx]
+        staged["gids"] = gb
         r0 = jnp.int32(row0)
-        b.x = self._place(_write_rows(b.x, jnp.asarray(xb), r0))
-        b.s = self._place(_write_rows(b.s, jnp.asarray(sb), r0))
-        b.gids = self._place(_write_rows(b.gids, jnp.asarray(gb), r0))
+        for name, block in staged.items():
+            written = _write_rows(getattr(b, name), jnp.asarray(block), r0)
+            setattr(b, name, self._place(written))
         b.seg_ids[row0: row0 + self.n_shards] = src.seg_id
         b.t_min[row0: row0 + self.n_shards] = src.t_min
         b.t_max[row0: row0 + self.n_shards] = src.t_max
@@ -570,8 +696,12 @@ class BucketedShardPack:
             if pad:
                 rows = np.concatenate([rows, np.full(pad, rows[0], np.int32)])
                 cols = np.concatenate([cols, np.full(pad, cols[0], np.int32)])
-            b.s = self._place(_mask_meta(b.s, jnp.asarray(rows),
-                                         jnp.asarray(cols)))
+            if self.quantize:
+                b.st = self._place(_mask_meta_t(b.st, jnp.asarray(rows),
+                                                jnp.asarray(cols)))
+            else:
+                b.s = self._place(_mask_meta(b.s, jnp.asarray(rows),
+                                             jnp.asarray(cols)))
         return total
 
     def sync_alive(self, alive: np.ndarray) -> int:
@@ -592,16 +722,18 @@ class BucketedShardPack:
         for cap in sorted(self.buckets):
             b = self.buckets[cap]
             if (b.seg_ids >= 0).any():
-                views.append(BucketView(cap, b.x, b.s, b.gids,
-                                        b.seg_ids.copy(), b.t_min.copy(),
-                                        b.t_max.copy()))
+                views.append(BucketView(cap, b.gids, b.seg_ids.copy(),
+                                        b.t_min.copy(), b.t_max.copy(),
+                                        x=b.x, s=b.s, codes=b.codes,
+                                        st=b.st, scales=b.scales))
         return PackView(self.epoch, self.n_shards, self.m, tuple(views),
-                        self.nbytes)
+                        self.nbytes, quantize=self.quantize)
 
 
 def build_bucketed_pack(sources: Sequence[SegmentShardSource], n_shards: int,
                         epoch: int = 0, mesh: Optional[Mesh] = None,
-                        cap_multiple: int = 256) -> BucketedShardPack:
+                        cap_multiple: int = 256,
+                        quantize: Optional[str] = None) -> BucketedShardPack:
     """Cold-build a :class:`BucketedShardPack` (restore / first query /
     bucket-geometry change): the same :meth:`~BucketedShardPack.add_segment`
     delta applied once per segment, so an incrementally maintained pack and
@@ -610,7 +742,7 @@ def build_bucketed_pack(sources: Sequence[SegmentShardSource], n_shards: int,
         raise ValueError("build_bucketed_pack needs at least one segment")
     pack = BucketedShardPack(n_shards, sources[0].x.shape[1],
                              sources[0].s.shape[1], epoch=epoch, mesh=mesh,
-                             cap_multiple=cap_multiple)
+                             cap_multiple=cap_multiple, quantize=quantize)
     for src in sources:
         pack.add_segment(src)
     return pack
@@ -682,10 +814,14 @@ def pack_search_blocks(view: PackView, queries: np.ndarray,
 
     A bucket whose segment spans all miss ``[t_lo, t_hi]`` is skipped
     entirely — temporal pruning drops whole device blocks, not just rows.
-    Each dispatched bucket contributes one exact ``(gids [b, k_b],
+    Each dispatched fp32 bucket contributes one exact ``(gids [b, k_b],
     dists [b, k_b])`` candidate block, ready for the caller's exact
     ``(gid, dist)`` merge (``streaming.query.merge_topk`` /
-    :func:`host_topk`).
+    :func:`host_topk`).  Quantized buckets dispatch the asymmetric int8
+    kernel instead and their blocks carry *approximate* distances — the
+    caller over-fetches (``k = rerank_multiple * final_k``) and must
+    rerank the union exactly at fp32 (``repro.quant.rerank.rerank_exact``)
+    before merging with exact blocks.
     """
     queries = np.atleast_2d(np.asarray(queries, np.float32))
     blocks: List[Tuple[np.ndarray, np.ndarray]] = []
@@ -696,9 +832,14 @@ def pack_search_blocks(view: PackView, queries: np.ndarray,
         kk = min(k, bv.cap)               # per-shard list length
         # merged width: for k > cap the per-shard lists (= whole shards)
         # still hold up to rows * kk candidates, so the top-k stays exact
-        k_out = min(k, int(bv.x.shape[0]) * kk)
-        ids, dd = sharded_filtered_topk(queries, bv.x, bv.s, filt, kk,
-                                        metric=metric, m=view.m)
+        k_out = min(k, int(bv.gids.shape[0]) * kk)
+        if bv.quantized:
+            ids, dd = sharded_quant_filtered_topk(
+                queries, bv.codes, bv.st, bv.scales, filt, kk,
+                metric=metric, m=view.m)
+        else:
+            ids, dd = sharded_filtered_topk(queries, bv.x, bv.s, filt, kk,
+                                            metric=metric, m=view.m)
         out_g, out_d = _merge_shard_topk(ids, dd, bv.gids,
                                          jnp.asarray(active), k_out)
         blocks.append((np.asarray(out_g, np.int64),
@@ -708,7 +849,8 @@ def pack_search_blocks(view: PackView, queries: np.ndarray,
 
 def pack_search(pack, queries: np.ndarray, filt: Optional[Filter],
                 k: int, t_lo: float = -np.inf, t_hi: float = np.inf,
-                metric: str = "l2") -> Tuple[np.ndarray, np.ndarray]:
+                metric: str = "l2", lookup=None,
+                rerank_multiple: int = 4) -> Tuple[np.ndarray, np.ndarray]:
     """Fan one query batch out over every active shard of the pack and merge
     the shard-local top-k exactly.
 
@@ -716,19 +858,33 @@ def pack_search(pack, queries: np.ndarray, filt: Optional[Filter],
     or a :class:`PackView`.  Temporal pruning happens via the ``active``
     mask (host-computed from the per-row segment spans) — and, for the
     bucketed layouts, by skipping whole bucket blocks — so the jit cache
-    sees one static shape per pack/bucket.  Returns ``(gids [b, k] int64,
+    sees one static shape per pack/bucket.  A quantized pack additionally
+    needs ``lookup(gids) -> (x, s, present)`` (the manager's point-store
+    getter) for the exact fp32 rerank of its over-fetched
+    (``rerank_multiple * k``) candidates.  Returns ``(gids [b, k] int64,
     dists [b, k] fp32)`` with ``-1`` / ``+inf`` padding.
     """
     queries = np.atleast_2d(np.asarray(queries, np.float32))
     b = queries.shape[0]
     if isinstance(pack, (BucketedShardPack, PackView)):
         view = pack.view() if isinstance(pack, BucketedShardPack) else pack
-        blocks = pack_search_blocks(view, queries, filt, k, t_lo=t_lo,
+        quantized = view.quantize is not None
+        k_fetch = max(k * max(int(rerank_multiple), 1), k) if quantized \
+            else k
+        blocks = pack_search_blocks(view, queries, filt, k_fetch, t_lo=t_lo,
                                     t_hi=t_hi, metric=metric)
         if not blocks:
             return (np.full((b, k), -1, np.int64),
                     np.full((b, k), np.inf, np.float32))
         g = np.concatenate([bg for bg, _ in blocks], axis=1)
+        if quantized:
+            # the approximate distances are never read past this point —
+            # the rerank re-scores candidates from their gids alone
+            if lookup is None:
+                raise ValueError("a quantized pack needs lookup= for the "
+                                 "exact fp32 rerank")
+            from ..quant import rerank_exact
+            return rerank_exact(queries, g, k, lookup, metric=metric)
         d = np.concatenate([bd for _, bd in blocks], axis=1)
         return host_topk(g, d, k)
     kk = min(k, pack.cap)                 # per-shard list length

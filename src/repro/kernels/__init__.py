@@ -4,11 +4,18 @@ interpret mode on CPU; see DESIGN.md §2.2).
 - ``distance``      tiled pairwise distance matrix (MXU contraction)
 - ``filtered_topk`` fused distance + spatio-temporal predicate + streaming
                     top-k (the paper's Fig. 3 aligned-traversal loop)
+- ``quant_topk``    fused *asymmetric-distance* filtered top-k over int8
+                    segment codes (scale-folded fp32 query × int8 codes)
 - ``ref``           pure-jnp oracles
-- ``ops``           jit'd wrappers with padding + filter encoding
+- ``ops``           jit'd wrappers with padding + filter encoding, plus
+                    the dispatch compile-warming registry
 """
-from .ops import (PAD_META, exact_filtered_search, filtered_topk, next_pow2,
-                  pairwise_dist, sharded_filtered_topk)
+from .ops import (PAD_META, dispatch_trace_count, exact_filtered_search,
+                  filtered_topk, next_pow2, pairwise_dist, quant_meta_rows,
+                  round_up, sharded_filtered_topk,
+                  sharded_quant_filtered_topk, warm_sharded_shapes)
 
-__all__ = ["PAD_META", "exact_filtered_search", "filtered_topk", "next_pow2",
-           "pairwise_dist", "sharded_filtered_topk"]
+__all__ = ["PAD_META", "dispatch_trace_count", "exact_filtered_search",
+           "filtered_topk", "next_pow2", "pairwise_dist", "quant_meta_rows",
+           "round_up", "sharded_filtered_topk",
+           "sharded_quant_filtered_topk", "warm_sharded_shapes"]

@@ -6,7 +6,9 @@
 - ``manager``   seal policy, off-path compaction (plan/execute/publish with
                 an epoch guard), TTL expiry, point-store GC
 - ``query``     temporal segment pruning + fan-out (per-segment graph search
-                or mesh-sharded kernel scan) + exact ``(gid, dist)`` merge
+                or mesh-sharded kernel scan; with ``quantize="int8"`` a
+                two-stage int8 scan + exact fp32 rerank) + exact
+                ``(gid, dist)`` merge
 - ``persistence``  durability: CRC-framed write-ahead log, immutable
                 per-segment artifacts, atomic versioned manifest, and the
                 crash-consistent restore path (``SegmentManager.restore``)

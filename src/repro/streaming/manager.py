@@ -75,6 +75,21 @@ class StreamConfig:
     # epoch bump (kept for A/B benchmarking — see exp12).
     incremental_pack: bool = True
     pack_cap_multiple: int = 256          # bucket row-capacity quantum
+    # Quantized read path (requires n_shards >= 1 and incremental_pack):
+    # ``quantize="int8"`` fits per-dimension symmetric scales for every
+    # sealed segment at seal/compaction-publish, stores int8 codes instead
+    # of fp32 blocks on device (~4x more resident corpus per HBM byte),
+    # scans with the fused asymmetric-distance kernel over-fetching
+    # ``rerank_multiple * k`` candidates, and reranks them exactly at fp32
+    # before the standard merge.  ``None`` (default) keeps the fp32 path
+    # bit-for-bit unchanged — the A/B baseline for exp13.
+    quantize: Optional[str] = None
+    rerank_multiple: int = 4              # quantized over-fetch factor
+    # Pre-trace the per-bucket kernel dispatch when a bucket block is
+    # created or doubles, at seal/publish time (off the query path), so
+    # the first query after a growth pays no trace (exp12's residual
+    # spikes).
+    pack_warm_compile: bool = True
     store_chunk: int = 4096               # PointStore GC granularity (rows)
     # Durability (repro.streaming.persistence): with ``persist_dir`` set the
     # manager WAL-logs every ingest/delete/GC and checkpoints (segment
@@ -123,6 +138,17 @@ class SegmentManager:
         self.d = int(d)
         self.m = int(m)
         self.cfg = cfg
+        if cfg.quantize is not None:
+            from ..quant import QUANT_KINDS
+            if cfg.quantize not in QUANT_KINDS:
+                raise ValueError(f"unknown quantize kind {cfg.quantize!r}; "
+                                 f"supported: {QUANT_KINDS}")
+            if cfg.n_shards < 1:
+                raise ValueError("quantize requires the sharded read path "
+                                 "(StreamConfig.n_shards >= 1)")
+            if not cfg.incremental_pack:
+                raise ValueError("quantize requires incremental_pack=True "
+                                 "(the legacy monolithic pack is fp32-only)")
         self.time_dim = cfg.time_dim % m
         self.delta = DeltaBuffer(d, m, self.time_dim,
                                  capacity=min(cfg.seal_max_points, 4096))
@@ -287,14 +313,18 @@ class SegmentManager:
         return self.seal() if self.should_seal() else None
 
     def seal(self) -> Optional[SealedSegment]:
-        """Freeze the delta's live points into an immutable indexed segment."""
+        """Freeze the delta's live points into an immutable indexed segment
+        (with ``cfg.quantize``, also fit its scales and int8 codes here —
+        the segment is immutable from now on, so the codec payload is
+        final)."""
         with self._lock:
             xl, sl, gl = self.delta.live_points()
             self.delta.reset()
             if len(gl) == 0:
                 return None
             seg = SealedSegment.from_points(self._next_seg_id, xl, sl, gl,
-                                            self.time_dim, self.cfg.index_cfg)
+                                            self.time_dim, self.cfg.index_cfg,
+                                            quantize=self.cfg.quantize)
             self._next_seg_id += 1
             self.segments.append(seg)
             self.segments.sort(key=lambda g: g.t_min)
@@ -302,7 +332,41 @@ class SegmentManager:
             self.counters["sealed"] += 1
             self._apply_pack_delta((), (seg,))
             self._checkpoint_if_attached()
+        self._warm_pack()
         return seg
+
+    def _shard_source(self, seg: SealedSegment):
+        """One segment's live points (plus its codec payload when the
+        quantized read path is on) as a pack delta input.  Built from the
+        segment's single-snapshot :meth:`~SealedSegment.live_snapshot`, so
+        the lock-free cold pack build can never see vectors and codec rows
+        of different lengths when a delete races it (the row set itself is
+        reconciled later by ``sync_alive``, as for the fp32 path)."""
+        from ..distributed.segment_shards import SegmentShardSource
+        xl, sl, gl, quant = seg.live_snapshot()
+        codes = scales = xsq = None
+        if self.cfg.quantize is not None and quant is not None:
+            codes, scales, xsq = quant.codes, quant.scales, quant.xsq
+        return SegmentShardSource(seg.seg_id, xl, sl, gl, seg.t_min,
+                                  seg.t_max, codes=codes, scales=scales,
+                                  xsq=xsq)
+
+    def _warm_pack(self) -> int:
+        """Pre-trace the kernel dispatch for bucket blocks the last pack
+        delta created or doubled — called at the end of a seal / publish
+        transition, so the trace cost lands on the (already index-building)
+        write path instead of the next query (exp12's residual spikes).
+        Returns the number of dispatches warmed."""
+        if not self.cfg.pack_warm_compile:
+            return 0
+        with self._lock:
+            pack = self._pack
+            shapes = (pack.drain_warm_shapes()
+                      if hasattr(pack, "drain_warm_shapes") else [])
+        if not shapes:
+            return 0
+        from ..kernels import warm_sharded_shapes
+        return warm_sharded_shapes(shapes)
 
     def _apply_pack_delta(self, removed, added) -> None:
         """Keep the cached bucketed pack in sync with one segment-list
@@ -317,20 +381,19 @@ class SegmentManager:
         pack = self._pack
         if pack is None:
             return
-        from ..distributed.segment_shards import (BucketedShardPack,
-                                                  SegmentShardSource)
+        from ..distributed.segment_shards import BucketedShardPack
         if (self.cfg.n_shards < 1 or not self.cfg.incremental_pack
-                or not isinstance(pack, BucketedShardPack)):
+                or not isinstance(pack, BucketedShardPack)
+                or pack.quantize != self.cfg.quantize):
             self._pack = None
             return
         try:
             for seg in removed:
                 pack.remove_segment(seg.seg_id)
             for seg in added:
-                xl, sl, gl = seg.live_points()
-                if len(gl):
-                    pack.add_segment(SegmentShardSource(
-                        seg.seg_id, xl, sl, gl, seg.t_min, seg.t_max))
+                src = self._shard_source(seg)
+                if len(src.gids):
+                    pack.add_segment(src)
             pack.epoch = self.epoch
         except Exception:                 # pragma: no cover - defensive
             self._pack = None
@@ -417,7 +480,7 @@ class SegmentManager:
         ``(victims, replacement)`` pairs."""
         built: List[Tuple[List[SealedSegment], Optional[SealedSegment]]] = []
         for seg in plan.gc:
-            built.append(([seg], seg.compacted()))
+            built.append(([seg], seg.compacted(quantize=self.cfg.quantize)))
         for grp in plan.merges:
             built.append((grp, self._merge_group(grp)))
         if self.persist is not None:
@@ -470,6 +533,7 @@ class SegmentManager:
                 self.counters["compactions"] += 1
             if changed:
                 self._checkpoint_if_attached()
+        self._warm_pack()
         return ops
 
     def compact(self) -> int:
@@ -525,7 +589,8 @@ class SegmentManager:
             self._next_seg_id += 1
         return SealedSegment.from_points(sid, np.concatenate(xs),
                                          np.concatenate(ss), gids,
-                                         self.time_dim, self.cfg.index_cfg)
+                                         self.time_dim, self.cfg.index_cfg,
+                                         quantize=self.cfg.quantize)
 
     def maintenance(self, async_compaction: bool = False) -> dict:
         """One lifecycle tick: seal (if due) + expire + compact + store GC.
@@ -621,7 +686,6 @@ class SegmentManager:
         interleave with a concurrent delta application.
         """
         from ..distributed.segment_shards import (BucketedShardPack,
-                                                  SegmentShardSource,
                                                   build_bucketed_pack,
                                                   build_shard_pack)
 
@@ -635,17 +699,19 @@ class SegmentManager:
                 return _read_state(pack)
         sources = []
         for seg in segments:
-            xl, sl, gl = seg.live_points()
-            if len(gl) == 0:
-                continue
-            sources.append(SegmentShardSource(seg.seg_id, xl, sl, gl,
-                                              seg.t_min, seg.t_max))
+            src = self._shard_source(seg)
+            if len(src.gids):
+                sources.append(src)
         if not sources:
             return None
         if self.cfg.incremental_pack:
             pack = build_bucketed_pack(
                 sources, self.cfg.n_shards, epoch, mesh=self.shard_mesh,
-                cap_multiple=self.cfg.pack_cap_multiple)
+                cap_multiple=self.cfg.pack_cap_multiple,
+                quantize=self.cfg.quantize)
+            # a cold build's dispatches compile during this same query
+            # anyway — drop its warm-shape backlog instead of re-tracing
+            pack.drain_warm_shapes()
         else:
             pack = build_shard_pack(sources, self.cfg.n_shards, epoch,
                                     mesh=self.shard_mesh)
@@ -680,6 +746,7 @@ class SegmentManager:
                 "now": self.now,
                 "epoch": self.epoch,
                 "n_shards": self.cfg.n_shards,
+                "quantize": self.cfg.quantize,
                 "store_resident_points": self.store.resident_points,
                 "store_nbytes": self.store.nbytes,
                 **self.counters,

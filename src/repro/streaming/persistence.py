@@ -12,9 +12,12 @@ crash-consistent durability:
 * **Segment artifacts** — immutable per-segment directories written once at
   seal / compaction-publish through the extended
   :func:`repro.core.cubegraph.save_index` (graphs + standalone ``x.npy`` /
-  ``s.npy`` point arrays + gid map + time range).  Restore loads them with
-  ``np.load(mmap_mode="r")`` for cheap replica warm-start.  Artifacts are
-  staged in a ``*.tmp`` directory and published with one ``os.replace``.
+  ``s.npy`` point arrays + gid map + time range; with the quantized read
+  path on, also the int8 codec payload — codes, per-dimension scales,
+  dequantized norms — so restore never re-quantizes).  Restore loads them
+  with ``np.load(mmap_mode="r")`` for cheap replica warm-start.  Artifacts
+  are staged in a ``*.tmp`` directory and published with one
+  ``os.replace``.
 
 * **Versioned manifest** (``MANIFEST.json``) — the commit point.  A
   checkpoint captures the mutable residue (liveness bitmap, delta buffer,
@@ -294,10 +297,17 @@ def write_segment_artifact(seg: SealedSegment, directory: str,
     tmp = directory + ".tmp"
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
-    save_index(seg.index, tmp,
-               extra_arrays={"gids": seg.gids},
-               extra_meta={"seg_id": seg.seg_id, "time_dim": seg.time_dim,
-                           "t_min": seg.t_min, "t_max": seg.t_max})
+    extra_arrays = {"gids": seg.gids}
+    extra_meta = {"seg_id": seg.seg_id, "time_dim": seg.time_dim,
+                  "t_min": seg.t_min, "t_max": seg.t_max}
+    if seg.quant is not None:
+        # the codec payload is part of the immutable artifact: restore
+        # attaches it as-is and never re-fits scales or re-encodes
+        extra_arrays.update(qcodes=seg.quant.codes, qscales=seg.quant.scales,
+                            qxsq=seg.quant.xsq)
+        extra_meta["quant_kind"] = seg.quant.kind
+    save_index(seg.index, tmp, extra_arrays=extra_arrays,
+               extra_meta=extra_meta)
     if fault_hook is not None:
         fault_hook("segment.write")
     _fsync_tree(tmp)
@@ -311,11 +321,24 @@ def load_segment_artifact(directory: str,
                           mmap_mode: Optional[str] = "r") -> SealedSegment:
     """Artifact directory -> :class:`SealedSegment` (point arrays mmapped
     by default; validity is re-derived by the caller from the manager's
-    restored liveness bitmap)."""
+    restored liveness bitmap).  A quantized artifact's codec payload
+    (codes / scales / norms) is attached verbatim — restore never
+    re-quantizes, so a restored replica's int8 scan is bit-for-bit the
+    writer's."""
     idx = load_index(directory, mmap_mode=mmap_mode)
     arrays, extra = load_index_extras(directory, ["gids"])
+    quant = None
+    if extra.get("quant_kind"):
+        from ..quant import SegmentQuant
+        qarr, _ = load_index_extras(directory,
+                                    ["qcodes", "qscales", "qxsq"])
+        quant = SegmentQuant(str(extra["quant_kind"]),
+                             np.array(qarr["qcodes"]),
+                             np.array(qarr["qscales"]),
+                             np.array(qarr["qxsq"]))
     return SealedSegment(int(extra["seg_id"]), idx,
-                         np.array(arrays["gids"]), int(extra["time_dim"]))
+                         np.array(arrays["gids"]), int(extra["time_dim"]),
+                         quant=quant)
 
 
 # ---------------------------------------------------------------------------
@@ -423,7 +446,11 @@ class StreamPersistence:
             art = self.stage_segment(seg)     # no-op when already staged
             entry = {"seg_id": seg.seg_id, "dir": art,
                      "t_min": seg.t_min, "t_max": seg.t_max,
-                     "n": seg.n, "n_live": seg.n_live}
+                     "n": seg.n, "n_live": seg.n_live,
+                     # which codec (if any) the artifact's codes carry, so
+                     # operators can audit a snapshot's quantization state
+                     # without opening artifacts
+                     "quant": None if seg.quant is None else seg.quant.kind}
             if manager.cfg.n_shards >= 1:
                 # pack state is derived (restore cold-builds the buckets
                 # lazily on the first sharded query), but the manifest

@@ -18,6 +18,13 @@ point store stays off the hot path entirely.  The merged result is finally
 filtered through the manager's liveness bitmap, which is what makes query
 results immune to racing deletions/compactions (see the epoch guarantee in
 ``repro.streaming.manager``).
+
+With ``StreamConfig(quantize="int8")`` the sealed-pack scan becomes
+two-stage: the per-bucket dispatches run the fused asymmetric-distance
+kernel over int8 codes and over-fetch ``rerank_multiple * k`` candidates,
+which are reranked exactly at fp32 (``repro.quant.rerank``) before
+entering the same merge — so the merged block is exact again and the
+delta buffer / liveness semantics are untouched.
 """
 from __future__ import annotations
 
@@ -129,7 +136,19 @@ def query_segments(manager, queries: np.ndarray, filt: Optional[Filter],
         dt_ms = 0.0
         if pack is not None:
             t0 = time.perf_counter()
-            if isinstance(pack, PackView):
+            if isinstance(pack, PackView) and pack.quantize is not None:
+                # two-stage quantized read path: pack_search over-fetches
+                # rerank_multiple * k candidates from each unpruned
+                # bucket's int8 asymmetric-distance dispatch and reranks
+                # the union exactly at fp32 (original vectors from the
+                # point store) — one exact (gid, dist) block for the merge
+                gg, dd = pack_search(
+                    pack, queries, filt, k, t_lo=t_lo, t_hi=t_hi,
+                    metric=metric, lookup=manager.get_points,
+                    rerank_multiple=manager.cfg.rerank_multiple)
+                blocks_g.append(gg)
+                blocks_d.append(dd)
+            elif isinstance(pack, PackView):
                 # one fused dispatch per unpruned capacity bucket; every
                 # bucket block joins the same exact (gid, dist) merge as
                 # the delta block below

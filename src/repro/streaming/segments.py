@@ -335,11 +335,16 @@ class SealedSegment:
     """
 
     def __init__(self, seg_id: int, index: CubeGraphIndex, gids: np.ndarray,
-                 time_dim: int):
+                 time_dim: int, quant=None):
         self.seg_id = int(seg_id)
         self.index = index
         self.gids = np.asarray(gids, np.int64)
         self.time_dim = int(time_dim)
+        # int8 codec payload (repro.quant.SegmentQuant, rows parallel to
+        # index.x) — fit exactly once, at seal or compaction-publish, and
+        # round-tripped through segment artifacts so restore never
+        # re-quantizes
+        self.quant = quant
         # durable-artifact bookkeeping: persistence root -> artifact dir
         # name, filled in by repro.streaming.persistence when this segment
         # is written to (or restored from) a snapshot directory
@@ -354,11 +359,20 @@ class SealedSegment:
     @classmethod
     def from_points(cls, seg_id: int, x: np.ndarray, s: np.ndarray,
                     gids: np.ndarray, time_dim: int,
-                    cfg: CubeGraphConfig) -> "SealedSegment":
-        """Build the segment's CubeGraphIndex over the given points."""
+                    cfg: CubeGraphConfig,
+                    quantize: Optional[str] = None) -> "SealedSegment":
+        """Build the segment's CubeGraphIndex over the given points; with
+        ``quantize`` set, also fit the per-dimension scales and encode the
+        int8 codec payload (this is a seal / compaction-publish — the only
+        times a segment's content is written, hence the only times scales
+        are fit)."""
         index = CubeGraphIndex.build(np.asarray(x, np.float32),
                                      np.asarray(s, np.float64), cfg)
-        return cls(seg_id, index, gids, time_dim)
+        quant = None
+        if quantize is not None:
+            from ..quant import encode_segment
+            quant = encode_segment(np.asarray(x, np.float32), quantize)
+        return cls(seg_id, index, gids, time_dim, quant=quant)
 
     @property
     def n(self) -> int:
@@ -401,11 +415,42 @@ class SealedSegment:
             self.index.delete(local)
         return len(local)
 
-    def compacted(self) -> "SealedSegment":
-        """GC lazy deletions: rebuild over live points (same seg id/gids)."""
+    def live_snapshot(self):
+        """``(x, s, gids, quant)`` of the live rows, all derived from ONE
+        read of the validity mask — the input a lock-free reader (the cold
+        shard-pack build) must use, so a delete racing it can never yield
+        vectors and codec rows of different lengths.  ``quant`` is the
+        row-subset :class:`~repro.quant.codec.SegmentQuant` payload, or
+        ``None`` when the segment carries no codec."""
         keep = np.nonzero(self.index.valid)[0]
-        return SealedSegment(self.seg_id, self.index.compact(),
-                             self.gids[keep], self.time_dim)
+        quant = self.quant.take(keep) if self.quant is not None else None
+        return (np.asarray(self.index.x)[keep], self.index.s_np[keep],
+                self.gids[keep].copy(), quant)
+
+    def compacted(self, quantize: Optional[str] = None) -> "SealedSegment":
+        """GC lazy deletions: rebuild over live points (same seg id/gids).
+        A quantized segment re-fits its scales over the surviving rows —
+        this is a compaction publish, i.e. a content rewrite, exactly when
+        the codec contract allows re-encoding.  ``quantize`` (the owner's
+        configured codec) also lets a segment restored from a
+        pre-quantization snapshot gain its codec at this rewrite.
+
+        Index, gid map, and codec payload all derive from ONE
+        :meth:`live_snapshot` of the validity mask: this method runs on
+        the lock-free compaction execute phase, so a racing delete may
+        shrink or keep the row set but can never misalign the rebuilt
+        index's rows with the gids/codes (the racing delete itself is
+        re-applied to the replacement at publish time)."""
+        x, s, gids, _ = self.live_snapshot()
+        kind = quantize if quantize is not None else \
+            (self.quant.kind if self.quant is not None else None)
+        quant = None
+        if kind is not None:
+            from ..quant import encode_segment
+            quant = encode_segment(x, kind)
+        index = CubeGraphIndex.build(x, s, self.index.cfg)
+        return SealedSegment(self.seg_id, index, gids, self.time_dim,
+                             quant=quant)
 
     def query(self, queries: np.ndarray, filt: Optional[Filter], k: int,
               ef: int = 64, **kw) -> Tuple[np.ndarray, np.ndarray]:

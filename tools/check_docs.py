@@ -21,12 +21,15 @@ import pathlib
 import sys
 
 REPO = pathlib.Path(__file__).resolve().parent.parent
-LINT_DIRS = ("src/repro/streaming", "src/repro/distributed")
+LINT_DIRS = ("src/repro/streaming", "src/repro/distributed",
+             "src/repro/quant")
 # Files the docstring lint MUST cover — guards against a rename/move
 # silently dropping a linted subsystem out of LINT_DIRS.
 REQUIRED_LINTED = ("src/repro/streaming/persistence.py",
                    "src/repro/streaming/manager.py",
-                   "src/repro/distributed/segment_shards.py")
+                   "src/repro/distributed/segment_shards.py",
+                   "src/repro/quant/codec.py",
+                   "src/repro/quant/rerank.py")
 
 
 def check_bench_docs() -> list:
