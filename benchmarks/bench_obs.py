@@ -1,0 +1,123 @@
+"""Exp-14: observed per-bucket statistics + tracer overhead.
+
+Runs the exp-12 workload shape (one jumbo sealed segment plus a stream of
+small seals, ``n_shards=2``) against temporally windowed queries so
+whole-block pruning actually fires, then reports
+
+* the per-capacity-bucket observation stats the cost-based planner will
+  consume (pruning rate, censored filter selectivity, scanned padded rows,
+  dispatch-cache hit rate) straight from ``SegmentManager.stats()["obs"]``;
+* the steady-state query latency with tracing **off** (the production
+  configuration) and with a full span-tree trace attached, and their ratio
+  — the tracer must cost < 2% on the median untraced latency, since the
+  span clocks only wrap dispatches that already block on device results.
+
+The top-level payload keys ``pruning_rate`` / ``selectivity`` /
+``tracer_overhead_pct`` feed the BENCH_streaming.json perf-trajectory
+digest (see ``common.streaming_summary``).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import CubeGraphConfig, IntervalFilter
+from repro.streaming import SegmentManager, StreamConfig
+
+from .common import BENCH_D, BENCH_N, BENCH_Q, csv_row, record
+
+CFG = CubeGraphConfig(n_layers=3, m_intra=12, m_cross=4)
+REPS = 15
+
+
+def _median_latency_us(fn, reps=REPS):
+    """Median wall time of ``fn()`` in µs over ``reps`` calls (after the
+    caller has warmed compilation)."""
+    lats = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        lats.append((time.perf_counter() - t0) * 1e6)
+    lats.sort()
+    return lats[len(lats) // 2]
+
+
+def run():
+    d = BENCH_D
+    jumbo = max(BENCH_N // 2, 2048)
+    small = max(BENCH_N // 24, 256)
+    n_small = 8
+    rng = np.random.default_rng(41)
+    q = rng.normal(size=(BENCH_Q, d)).astype(np.float32)
+
+    def batch(gen, n, t0):
+        x = gen.normal(size=(n, d)).astype(np.float32)
+        s = gen.uniform(size=(n, 3))
+        s[:, 2] = t0 + np.linspace(0.0, 0.9, n)
+        return x, s
+
+    gen = np.random.default_rng(41)
+    mgr = SegmentManager(d, 3, StreamConfig(
+        time_dim=2, seal_max_points=1 << 30, n_shards=2, index_cfg=CFG))
+    x, s = batch(gen, jumbo, 0.0)
+    mgr.ingest(x, s)
+    mgr.seal()
+    for i in range(n_small):
+        x, s = batch(gen, small, float(i + 1))
+        mgr.ingest(x, s)
+        mgr.seal()
+
+    # a mid-stream window: covers the first few small segments but prunes
+    # the jumbo segment and the tail — pruning + selectivity both non-trivial
+    filt = IntervalFilter(dim=2, lo=np.float32(1.2), hi=np.float32(3.8))
+    mgr.query(q, filt, k=10)                      # build pack + compile
+    mgr.query(q, None, k=10)                      # compile unfiltered too
+
+    untraced_us = _median_latency_us(lambda: mgr.query(q, filt, k=10))
+    traced_us = _median_latency_us(
+        lambda: mgr.query(q, filt, k=10, return_trace=True))
+    overhead_pct = (traced_us - untraced_us) / untraced_us * 100.0
+
+    obs = mgr.stats()["obs"]
+    buckets = obs["buckets"]
+    total = {k: sum(row[k] for row in buckets.values())
+             for k in ("rows", "blocks_pruned", "candidates",
+                       "candidate_slots", "dispatches", "cache_hits")}
+    pruning_rate = round(total["blocks_pruned"] / max(total["rows"], 1), 4)
+    selectivity = round(total["candidates"]
+                        / max(total["candidate_slots"], 1), 4)
+    cache_hit_rate = round(total["cache_hits"]
+                           / max(total["dispatches"], 1), 4)
+
+    # one fully traced query for the span-tree exhibit
+    _, _, trace = mgr.query(q, filt, k=10, return_trace=True)
+
+    out = {
+        "jumbo_points": jumbo, "small_points": small,
+        "n_small_segments": n_small, "reps": REPS,
+        "us_per_query": round(untraced_us / BENCH_Q, 1),
+        "traced_us_per_query": round(traced_us / BENCH_Q, 1),
+        "tracer_overhead_pct": round(overhead_pct, 2),
+        "pruning_rate": pruning_rate,
+        "selectivity": selectivity,
+        "dispatch_cache_hit_rate": cache_hit_rate,
+        "query_ms_hist": obs["metrics"]["histograms"]["query_ms"],
+        # raw per-bucket counts only: the derived rates are dropped from
+        # the embedded copy so the BENCH_streaming.json digest picks up
+        # exactly one pruning_rate/selectivity per section (the aggregate)
+        "buckets": {cap: {k: v for k, v in row.items()
+                          if k not in ("pruning_rate", "selectivity")}
+                    for cap, row in buckets.items()},
+        "trace": trace.to_dict(),
+    }
+    csv_row("exp14/observed_stats", out["us_per_query"],
+            f"pruning_rate={pruning_rate};selectivity={selectivity};"
+            f"tracer_overhead_pct={out['tracer_overhead_pct']};"
+            f"cache_hit_rate={cache_hit_rate}")
+    record("exp14_observed_stats", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -75,7 +75,8 @@ def csv_row(name: str, us_per_call: float, derived: str):
 
 
 # -- machine-readable perf trajectory (BENCH_streaming.json) -----------------
-STREAMING_SECTIONS = ("exp9_", "exp10_", "exp11_", "exp12_", "exp13_")
+STREAMING_SECTIONS = ("exp9_", "exp10_", "exp11_", "exp12_", "exp13_",
+                      "exp14_")
 _SUMMARY_LATENCY_KEYS = {   # payload key -> (scale to µs, canonical name)
     "us_per_query": (1.0, "query_us"),
     "first_query_ms_after_seal": (1e3, "first_query_after_seal_us"),
@@ -86,8 +87,11 @@ _SUMMARY_BYTES_KEYS = ("pack_nbytes",)
 # recall of the *production* path only — baseline keys are prefixed
 # (fp32_..., rebuild_...) and sweep keys renamed, so they stay out
 _SUMMARY_RECALL_KEYS = ("recall", "recall_at_10")
-# dimensionless ratios reported once per section (kept as-is, not medianed)
-_SUMMARY_RATIO_KEYS = ("device_bytes_ratio",)
+# dimensionless ratios reported once per section (kept as-is, not medianed).
+# pruning_rate / selectivity / tracer_overhead_pct are exp-14's observed
+# per-bucket aggregates — the planner-contract numbers tracked across PRs
+_SUMMARY_RATIO_KEYS = ("device_bytes_ratio", "pruning_rate", "selectivity",
+                       "tracer_overhead_pct")
 
 
 def _collect(node, keys, out):

@@ -36,8 +36,9 @@ def main() -> None:
     from . import (bench_aspect_ratio, bench_distributions,
                    bench_filter_shapes, bench_index_cost, bench_kernels,
                    bench_merge_count, bench_merge_strategy, bench_multidim,
-                   bench_persistence, bench_quant, bench_scalability,
-                   bench_search, bench_streaming, bench_updates)
+                   bench_obs, bench_persistence, bench_quant,
+                   bench_scalability, bench_search, bench_streaming,
+                   bench_updates)
     from .common import flush_results
 
     sections = [
@@ -54,6 +55,7 @@ def main() -> None:
         ("exp11_persistence", bench_persistence.run),
         ("exp12_pack_maintenance", bench_streaming.run_pack_maintenance),
         ("exp13_quantized_scan", bench_quant.run),
+        ("exp14_observed_stats", bench_obs.run),
         ("a5_aspect_ratio", bench_aspect_ratio.run),
         ("a6_merge_strategy", bench_merge_strategy.run),
         ("kernels", bench_kernels.run),

@@ -66,8 +66,10 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..core import Filter
-from ..kernels import (PAD_META, next_pow2, quant_meta_rows, round_up,
-                       sharded_filtered_topk, sharded_quant_filtered_topk)
+from ..kernels import (PAD_META, dispatch_trace_count, next_pow2,
+                       quant_meta_rows, round_up, sharded_filtered_topk,
+                       sharded_quant_filtered_topk)
+from ..obs.trace import NULL_TRACE, block_ready
 
 __all__ = ["BucketedShardPack", "PackView", "SegmentShardSource",
            "ShardPack", "bucket_cap_for", "build_bucketed_pack",
@@ -416,7 +418,9 @@ class BucketedShardPack:
 
     def __init__(self, n_shards: int, d: int, m: int, epoch: int = 0,
                  mesh: Optional[Mesh] = None, cap_multiple: int = 256,
-                 quantize: Optional[str] = None):
+                 quantize: Optional[str] = None, metrics=None):
+        from ..obs.metrics import NULL_REGISTRY
+        self.metrics = NULL_REGISTRY if metrics is None else metrics
         self.n_shards = max(int(n_shards), 1)
         self.d = int(d)
         self.m = int(m)
@@ -618,6 +622,11 @@ class BucketedShardPack:
             idx = np.arange(sh, n, self.n_shards)
             gb[sh, : len(idx)] = src.gids[idx]
         staged["gids"] = gb
+        # delta upload volume: what this seal/publish actually shipped to
+        # the device (the occupancy gauges are the owner's job — it knows
+        # when a transition is complete)
+        self.metrics.counter("pack_delta_bytes_total").inc(
+            sum(arr.nbytes for arr in staged.values()))
         r0 = jnp.int32(row0)
         for name, block in staged.items():
             written = _write_rows(getattr(b, name), jnp.asarray(block), r0)
@@ -733,7 +742,8 @@ class BucketedShardPack:
 def build_bucketed_pack(sources: Sequence[SegmentShardSource], n_shards: int,
                         epoch: int = 0, mesh: Optional[Mesh] = None,
                         cap_multiple: int = 256,
-                        quantize: Optional[str] = None) -> BucketedShardPack:
+                        quantize: Optional[str] = None,
+                        metrics=None) -> BucketedShardPack:
     """Cold-build a :class:`BucketedShardPack` (restore / first query /
     bucket-geometry change): the same :meth:`~BucketedShardPack.add_segment`
     delta applied once per segment, so an incrementally maintained pack and
@@ -742,7 +752,8 @@ def build_bucketed_pack(sources: Sequence[SegmentShardSource], n_shards: int,
         raise ValueError("build_bucketed_pack needs at least one segment")
     pack = BucketedShardPack(n_shards, sources[0].x.shape[1],
                              sources[0].s.shape[1], epoch=epoch, mesh=mesh,
-                             cap_multiple=cap_multiple, quantize=quantize)
+                             cap_multiple=cap_multiple, quantize=quantize,
+                             metrics=metrics)
     for src in sources:
         pack.add_segment(src)
     return pack
@@ -808,7 +819,7 @@ def _merge_shard_topk(ids, dd, gid_stack, active, k):
 def pack_search_blocks(view: PackView, queries: np.ndarray,
                        filt: Optional[Filter], k: int,
                        t_lo: float = -np.inf, t_hi: float = np.inf,
-                       metric: str = "l2"
+                       metric: str = "l2", trace=None, observe=None
                        ) -> List[Tuple[np.ndarray, np.ndarray]]:
     """One fused-kernel dispatch per non-empty, temporally unpruned bucket.
 
@@ -822,35 +833,64 @@ def pack_search_blocks(view: PackView, queries: np.ndarray,
     caller over-fetches (``k = rerank_multiple * final_k``) and must
     rerank the union exactly at fp32 (``repro.quant.rerank.rerank_exact``)
     before merging with exact blocks.
+
+    ``trace`` (a ``repro.obs.trace.QueryTrace``) opens one span per
+    dispatched bucket, stopping its timer only after the bucket's device
+    results are ready; ``observe`` (``BucketStats.observe``-compatible
+    callable) receives one per-bucket observation per call — rows seen,
+    rows temporally pruned, candidate fill, and whether the dispatch hit
+    the jit cache.  Both default to off with zero overhead.
     """
     queries = np.atleast_2d(np.asarray(queries, np.float32))
+    trace = NULL_TRACE if trace is None else trace
+    want_obs = observe is not None or trace.enabled
     blocks: List[Tuple[np.ndarray, np.ndarray]] = []
     for bv in view.buckets:
         active = bv.active_rows(t_lo, t_hi)
-        if not active.any():
-            continue                      # whole-block temporal prune
+        rows = int(bv.gids.shape[0])
+        n_active = int(active.sum())
+        if n_active == 0:
+            if observe is not None:       # whole-block temporal prune
+                observe(bv.cap, rows=rows, active_rows=0)
+            continue
         kk = min(k, bv.cap)               # per-shard list length
         # merged width: for k > cap the per-shard lists (= whole shards)
         # still hold up to rows * kk candidates, so the top-k stays exact
-        k_out = min(k, int(bv.gids.shape[0]) * kk)
-        if bv.quantized:
-            ids, dd = sharded_quant_filtered_topk(
-                queries, bv.codes, bv.st, bv.scales, filt, kk,
-                metric=metric, m=view.m)
-        else:
-            ids, dd = sharded_filtered_topk(queries, bv.x, bv.s, filt, kk,
-                                            metric=metric, m=view.m)
-        out_g, out_d = _merge_shard_topk(ids, dd, bv.gids,
-                                         jnp.asarray(active), k_out)
-        blocks.append((np.asarray(out_g, np.int64),
-                       np.asarray(out_d, np.float32)))
+        k_out = min(k, rows * kk)
+        traces0 = dispatch_trace_count() if want_obs else 0
+        with trace.span("bucket_dispatch", cap=bv.cap, rows=rows,
+                        active_rows=n_active, k_out=k_out,
+                        quantized=bv.quantized) as sp:
+            if bv.quantized:
+                ids, dd = sharded_quant_filtered_topk(
+                    queries, bv.codes, bv.st, bv.scales, filt, kk,
+                    metric=metric, m=view.m)
+            else:
+                ids, dd = sharded_filtered_topk(queries, bv.x, bv.s, filt,
+                                                kk, metric=metric, m=view.m)
+            out_g, out_d = _merge_shard_topk(ids, dd, bv.gids,
+                                             jnp.asarray(active), k_out)
+            block_ready((out_g, out_d))
+        out_g = np.asarray(out_g, np.int64)
+        out_d = np.asarray(out_d, np.float32)
+        if want_obs:
+            cache_hit = dispatch_trace_count() == traces0
+            n_cand = int((out_g >= 0).sum())
+            sp.annotate(candidates=n_cand, cache_hit=cache_hit)
+            if observe is not None:
+                observe(bv.cap, rows=rows, active_rows=n_active,
+                        candidates=n_cand,
+                        candidate_slots=queries.shape[0] * k_out,
+                        cache_hit=cache_hit)
+        blocks.append((out_g, out_d))
     return blocks
 
 
 def pack_search(pack, queries: np.ndarray, filt: Optional[Filter],
                 k: int, t_lo: float = -np.inf, t_hi: float = np.inf,
                 metric: str = "l2", lookup=None,
-                rerank_multiple: int = 4) -> Tuple[np.ndarray, np.ndarray]:
+                rerank_multiple: int = 4, trace=None,
+                observe=None) -> Tuple[np.ndarray, np.ndarray]:
     """Fan one query batch out over every active shard of the pack and merge
     the shard-local top-k exactly.
 
@@ -866,13 +906,15 @@ def pack_search(pack, queries: np.ndarray, filt: Optional[Filter],
     """
     queries = np.atleast_2d(np.asarray(queries, np.float32))
     b = queries.shape[0]
+    trace = NULL_TRACE if trace is None else trace
     if isinstance(pack, (BucketedShardPack, PackView)):
         view = pack.view() if isinstance(pack, BucketedShardPack) else pack
         quantized = view.quantize is not None
         k_fetch = max(k * max(int(rerank_multiple), 1), k) if quantized \
             else k
         blocks = pack_search_blocks(view, queries, filt, k_fetch, t_lo=t_lo,
-                                    t_hi=t_hi, metric=metric)
+                                    t_hi=t_hi, metric=metric, trace=trace,
+                                    observe=observe)
         if not blocks:
             return (np.full((b, k), -1, np.int64),
                     np.full((b, k), np.inf, np.float32))
@@ -884,17 +926,26 @@ def pack_search(pack, queries: np.ndarray, filt: Optional[Filter],
                 raise ValueError("a quantized pack needs lookup= for the "
                                  "exact fp32 rerank")
             from ..quant import rerank_exact
-            return rerank_exact(queries, g, k, lookup, metric=metric)
+            with trace.span("rerank_fp32", overfetch=int(g.shape[1]),
+                            k=k) as sp:
+                out = rerank_exact(queries, g, k, lookup, metric=metric)
+                block_ready(out)
+                sp.annotate(candidates=int((out[0] >= 0).sum()))
+            return out
         d = np.concatenate([bd for _, bd in blocks], axis=1)
         return host_topk(g, d, k)
     kk = min(k, pack.cap)                 # per-shard list length
     # merged width: for k > cap the per-shard lists (= whole shards) still
     # hold up to n_rows * kk candidates, so the global top-k stays exact
     k_out = min(k, pack.n_rows * kk)
-    ids, dd = sharded_filtered_topk(queries, pack.x, pack.s_dev, filt, kk,
-                                    metric=metric, m=pack.m)
-    active = jnp.asarray(pack.active_rows(t_lo, t_hi))
-    out_g, out_d = _merge_shard_topk(ids, dd, pack.gids_dev, active, k_out)
+    with trace.span("pack_dispatch", rows=pack.n_rows, cap=pack.cap,
+                    k_out=k_out):
+        ids, dd = sharded_filtered_topk(queries, pack.x, pack.s_dev, filt,
+                                        kk, metric=metric, m=pack.m)
+        active = jnp.asarray(pack.active_rows(t_lo, t_hi))
+        out_g, out_d = _merge_shard_topk(ids, dd, pack.gids_dev, active,
+                                         k_out)
+        block_ready((out_g, out_d))
     gids = np.full((b, k), -1, np.int64)
     dists = np.full((b, k), np.inf, np.float32)
     gids[:, :k_out] = np.asarray(out_g, np.int64)

@@ -1,0 +1,31 @@
+"""Observability substrate: metrics registry, query tracer, bucket stats.
+
+Two small modules give every layer of the streaming/serving stack a shared
+measurement vocabulary without adding dependencies:
+
+* :mod:`repro.obs.metrics` — named counters, gauges, and log-bucketed
+  latency histograms behind a thread-safe :class:`MetricsRegistry`; the
+  rolling per-capacity-bucket :class:`BucketStats` accumulator whose
+  snapshot schema is the input contract for the cost-based planner
+  (ROADMAP item 1); Prometheus text rendering and a strict-JSON
+  sanitizer shared with ``SegmentManager.stats()``.
+* :mod:`repro.obs.trace` — per-query :class:`QueryTrace` span trees whose
+  timers stop only after ``jax.block_until_ready`` (so spans measure
+  device work, not async enqueue) and wrap
+  ``jax.profiler.TraceAnnotation`` for XLA profile alignment.
+
+Disabled instances (``MetricsRegistry(enabled=False)``, ``NULL_TRACE``)
+hand out shared no-op singletons, so the instrumented hot paths cost a
+few attribute lookups and no per-query allocations when observability is
+off.  See ``docs/observability.md`` for the metric catalog and the span
+tree.
+"""
+from .metrics import (NULL_METRIC, NULL_REGISTRY, BucketStats, Counter,
+                      Gauge, Histogram, MetricsRegistry, StreamObs,
+                      json_sanitize, prometheus_text)
+from .trace import NULL_TRACE, QueryTrace, Span, block_ready
+
+__all__ = ["NULL_METRIC", "NULL_REGISTRY", "NULL_TRACE", "BucketStats",
+           "Counter", "Gauge", "Histogram", "MetricsRegistry", "QueryTrace",
+           "Span", "StreamObs", "block_ready", "json_sanitize",
+           "prometheus_text"]

@@ -12,6 +12,7 @@
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Dict, List, Optional
 
@@ -20,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import Filter
+from ..obs.metrics import NULL_REGISTRY
 from .serve_step import make_serve_fns
 
 
@@ -34,9 +36,10 @@ class Request:
 
 class ContinuousBatcher:
     def __init__(self, model, params, n_slots: int = 8, max_len: int = 512,
-                 eos_id: int = 1, temperature: float = 0.0):
+                 eos_id: int = 1, temperature: float = 0.0, metrics=None):
         self.model = model
         self.params = params
+        self.metrics = NULL_REGISTRY if metrics is None else metrics
         self.n_slots = n_slots
         self.max_len = max_len
         self.eos_id = eos_id
@@ -86,6 +89,11 @@ class ContinuousBatcher:
             jnp.asarray(self.pos), sub)
         tok = np.asarray(tok)
         self.steps += 1
+        # slot occupancy per decode tick: 1.0 means the lockstep decode
+        # wasted no lanes, low values mean admission is starved
+        self.metrics.counter("decode_steps_total").inc()
+        self.metrics.histogram("decode_slot_occupancy").observe(
+            len(self.active) / self.n_slots)
         done_slots = []
         for slot, req in list(self.active.items()):
             t = int(tok[slot, 0])
@@ -116,6 +124,7 @@ class RetrievalRequest:
     query_emb: np.ndarray            # [d_emb]
     filt: Filter
     k: int = 10
+    enqueued_at: float = 0.0         # stamped by RetrievalBatcher.submit
 
 
 def _filter_key(filt: Filter, k: int):
@@ -150,8 +159,13 @@ class RetrievalBatcher:
         self.maintenance_every = int(maintenance_every)
         self._flushes = 0
         self.queue: deque = deque()
+        # share the store's registry so queue-wait / batch-occupancy land
+        # in the same snapshot as the retrieval latencies
+        self.metrics = getattr(store, "metrics", None) or NULL_REGISTRY
 
     def submit(self, req: RetrievalRequest) -> None:
+        if not req.enqueued_at:
+            req.enqueued_at = time.perf_counter()
         self.queue.append(req)
 
     def __len__(self) -> int:
@@ -164,9 +178,19 @@ class RetrievalBatcher:
             req = self.queue.popleft()
             groups.setdefault(_filter_key(req.filt, req.k), []).append(req)
         results: Dict[int, list] = {}
+        t_flush = time.perf_counter()
+        wait_hist = self.metrics.histogram("retrieval_queue_wait_ms")
+        occ_hist = self.metrics.histogram("retrieval_batch_occupancy")
         for reqs in groups.values():
             for lo in range(0, len(reqs), self.max_batch):
                 chunk = reqs[lo:lo + self.max_batch]
+                # occupancy: how full each dispatched batch is relative to
+                # max_batch — persistently low means filters fragment the
+                # queue and the fan-out amortization is not happening
+                occ_hist.observe(len(chunk) / self.max_batch)
+                for r in chunk:
+                    if r.enqueued_at:
+                        wait_hist.observe((t_flush - r.enqueued_at) * 1e3)
                 q = np.stack([r.query_emb for r in chunk]).astype(np.float32)
                 rows = self.store.retrieve(q, chunk[0].filt, k=chunk[0].k,
                                            ef=self.ef)

@@ -9,6 +9,7 @@ in its encoder — orthogonal to the paper's contribution).
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, List, Optional, Sequence, Tuple
 
 import jax
@@ -16,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import CubeGraphConfig, CubeGraphIndex, Filter
+from ..obs import StreamObs, json_sanitize
 from ..streaming import SegmentManager, StreamConfig
 from .serve_step import generate
 
@@ -73,6 +75,15 @@ class DocumentStore:
                                  "(DocumentStore(streaming=True))")
             self.manager = None
             self.index = CubeGraphIndex.build(x, s, index_cfg)
+        self._init_obs()
+
+    def _init_obs(self) -> None:
+        """Bind the store's metrics to its backend: a streaming store
+        shares the manager's registry (serving-level request latencies land
+        next to the index-level lifecycle/query metrics in one snapshot);
+        a static store gets its own."""
+        self.obs = self.manager.obs if self.streaming else StreamObs()
+        self.metrics = self.obs.registry
 
     @classmethod
     def restore(cls, docs: Sequence[Document], directory: str,
@@ -92,6 +103,7 @@ class DocumentStore:
         obj.manager = SegmentManager.restore(directory, cfg=stream_cfg,
                                              shard_mesh=shard_mesh,
                                              resume=resume)
+        obj._init_obs()
         if obj.manager.n_total != len(obj.docs):
             raise ValueError(
                 f"snapshot knows {obj.manager.n_total} points but "
@@ -110,14 +122,35 @@ class DocumentStore:
         return self.manager.snapshot_to(directory)
 
     def retrieve(self, query_emb: np.ndarray, filt: Filter, k: int,
-                 ef: int = 64) -> List[List[Document]]:
+                 ef: int = 64, trace=None) -> List[List[Document]]:
+        """Filtered top-k document retrieval for a query-embedding batch.
+
+        The per-request end-to-end latency (index query + document
+        materialization) lands in the ``retrieve_ms`` histogram; pass a
+        ``repro.obs.trace.QueryTrace`` to additionally capture the span
+        tree of the underlying streaming query."""
+        t0 = time.perf_counter()
         q = np.atleast_2d(query_emb)
         if self.streaming:
-            ids, _ = self.manager.query(q, filt, k=k, ef=ef)
+            ids, _ = self.manager.query(q, filt, k=k, ef=ef, trace=trace)
         else:
             ids, _ = self.index.query(q, filt, k=k, ef=ef)
-        return [[self.docs[i] for i in row if i >= 0]
-                for row in np.asarray(ids)]
+        out = [[self.docs[i] for i in row if i >= 0]
+               for row in np.asarray(ids)]
+        self.metrics.counter("retrieve_requests_total").inc(q.shape[0])
+        self.metrics.histogram("retrieve_ms").observe(
+            (time.perf_counter() - t0) * 1e3)
+        return out
+
+    def metrics_snapshot(self) -> dict:
+        """Strict-JSON-safe export of every metric this store touches.
+
+        For a streaming store this is the manager's full observability
+        block (lifecycle counters, per-bucket :class:`BucketStats`, WAL /
+        checkpoint histograms) plus the serving-level request metrics that
+        share the same registry; ``tools/obs_dump.py`` renders it as
+        Prometheus text."""
+        return json_sanitize(self.obs.snapshot())
 
     def insert(self, docs: Sequence[Document]):
         """Static: incremental graph insertion.  Streaming: delta-buffer

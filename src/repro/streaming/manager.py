@@ -39,6 +39,7 @@ import dataclasses
 import math
 import os
 import threading
+import time
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -90,6 +91,12 @@ class StreamConfig:
     # the first query after a growth pays no trace (exp12's residual
     # spikes).
     pack_warm_compile: bool = True
+    # Observability (repro.obs): lifecycle/query counters, latency
+    # histograms, and the rolling per-bucket BucketStats accumulator that
+    # feeds the cost-based planner.  Off -> every instrumented call site
+    # hits shared no-op singletons (no allocations, no locks).  Per-query
+    # tracing is separately opt-in via query(..., return_trace=True).
+    obs_enabled: bool = True
     store_chunk: int = 4096               # PointStore GC granularity (rows)
     # Durability (repro.streaming.persistence): with ``persist_dir`` set the
     # manager WAL-logs every ingest/delete/GC and checkpoints (segment
@@ -170,6 +177,8 @@ class SegmentManager:
         self.counters = {"sealed": 0, "compactions": 0, "expired_segments": 0,
                          "expired_points": 0, "deleted": 0,
                          "store_gc_points": 0}
+        from ..obs import StreamObs
+        self.obs = StreamObs(enabled=cfg.obs_enabled)
         self.persist = None                         # StreamPersistence
         self._suspend_ckpt = False                  # batched seals in ingest
         if cfg.persist_dir and not _restoring:
@@ -179,7 +188,8 @@ class SegmentManager:
                     f"{cfg.persist_dir!r} already holds a snapshot — use "
                     "SegmentManager.restore(...) to resume it")
             self.persist = StreamPersistence(cfg.persist_dir,
-                                             cfg.wal_fsync_every)
+                                             cfg.wal_fsync_every,
+                                             metrics=self.obs.registry)
             # publish an (empty) manifest immediately so the directory is
             # restorable even if we crash before the first seal
             self.persist.checkpoint(self)
@@ -241,6 +251,8 @@ class SegmentManager:
             self._alive = grow_rows(self.n_total, (self._alive, False))[0]
             self._alive[gids] = True
             self.now = max(self.now, float(s[:, self.time_dim].max()))
+            self.obs.registry.counter(
+                "lifecycle_ingested_points_total").inc(n_add)
             # checkpoints are deferred to the end of the batch so a seal
             # mid-loop never captures a half-appended delta buffer
             self._suspend_ckpt = True
@@ -296,6 +308,8 @@ class SegmentManager:
         for seg in self.segments:
             hits += seg.delete(live)
         self.counters["deleted"] += hits
+        self.obs.registry.counter("lifecycle_deleted_points_total").inc(
+            len(live))
         return hits
 
     # ------------------------------------------------------------------
@@ -330,6 +344,9 @@ class SegmentManager:
             self.segments.sort(key=lambda g: g.t_min)
             self.epoch += 1
             self.counters["sealed"] += 1
+            self.obs.registry.counter("lifecycle_sealed_total").inc()
+            self.obs.registry.counter("lifecycle_sealed_points_total").inc(
+                len(gl))
             self._apply_pack_delta((), (seg,))
             self._checkpoint_if_attached()
         self._warm_pack()
@@ -388,6 +405,7 @@ class SegmentManager:
             self._pack = None
             return
         try:
+            pack.metrics = self.obs.registry
             for seg in removed:
                 pack.remove_segment(seg.seg_id)
             for seg in added:
@@ -395,8 +413,23 @@ class SegmentManager:
                 if len(src.gids):
                     pack.add_segment(src)
             pack.epoch = self.epoch
+            self._update_pack_gauges(pack)
         except Exception:                 # pragma: no cover - defensive
             self._pack = None
+
+    def _update_pack_gauges(self, pack) -> None:
+        """Refresh the device-pack occupancy gauges after a transition
+        (caller holds the lock).  Gauges for released capacity classes are
+        dropped rather than left frozen at their last value."""
+        reg = self.obs.registry
+        if not reg.enabled or not hasattr(pack, "bucket_stats"):
+            return
+        reg.drop_prefix("pack_bucket_")
+        reg.gauge("pack_nbytes").set(pack.nbytes)
+        reg.gauge("pack_segments").set(pack.n_segments)
+        for cap, row in pack.bucket_stats().items():
+            for key in ("rows", "live_rows", "segments"):
+                reg.gauge(f'pack_bucket_{key}{{cap="{cap}"}}').set(row[key])
 
     def _checkpoint_if_attached(self) -> None:
         """Durably checkpoint after a segment-list transition (no-op without
@@ -434,6 +467,10 @@ class SegmentManager:
             gl = self.delta.expire_before(cutoff)
             self._alive[gl] = False
             self.counters["expired_points"] += dropped + len(gl)
+            reg = self.obs.registry
+            reg.counter("lifecycle_expired_segments_total").inc(len(expired))
+            reg.counter("lifecycle_expired_points_total").inc(
+                dropped + len(gl))
             # list_changed matters on its own: dropping an all-dead segment
             # flips no liveness bit but still bumps the epoch and must reach
             # the manifest, or restore resurrects the segment
@@ -467,7 +504,11 @@ class SegmentManager:
                   and g.deleted_fraction() > self.cfg.compact_deleted_fraction]
             if not gc and not merges and not drop_empty:
                 return None
-            return CompactionPlan(self.epoch, gc, merges, drop_empty)
+            plan = CompactionPlan(self.epoch, gc, merges, drop_empty)
+            self.obs.registry.counter("compaction_plans_total").inc()
+            self.obs.registry.counter("compaction_planned_ops_total").inc(
+                plan.n_ops)
+            return plan
 
     def execute_compaction(self, plan: CompactionPlan
                            ) -> List[Tuple[List[SealedSegment],
@@ -478,6 +519,7 @@ class SegmentManager:
         durable artifacts are also staged here, lock-free, so the publish
         checkpoint under the lock only swaps state + manifest.  Returns
         ``(victims, replacement)`` pairs."""
+        t0 = time.perf_counter()
         built: List[Tuple[List[SealedSegment], Optional[SealedSegment]]] = []
         for seg in plan.gc:
             built.append(([seg], seg.compacted(quantize=self.cfg.quantize)))
@@ -487,6 +529,10 @@ class SegmentManager:
             for _, new_seg in built:
                 if new_seg is not None:
                     self.persist.stage_segment(new_seg)
+        self.obs.registry.counter("compaction_executed_ops_total").inc(
+            plan.n_ops)
+        self.obs.registry.histogram("compaction_execute_ms").observe(
+            (time.perf_counter() - t0) * 1e3)
         return built
 
     def publish_compaction(self, plan: CompactionPlan,
@@ -531,6 +577,8 @@ class SegmentManager:
                     [g for g in out if id(g) not in pre_ids])
             if ops:
                 self.counters["compactions"] += 1
+                self.obs.registry.counter(
+                    "compaction_published_ops_total").inc(ops)
             if changed:
                 self._checkpoint_if_attached()
         self._warm_pack()
@@ -708,7 +756,7 @@ class SegmentManager:
             pack = build_bucketed_pack(
                 sources, self.cfg.n_shards, epoch, mesh=self.shard_mesh,
                 cap_multiple=self.cfg.pack_cap_multiple,
-                quantize=self.cfg.quantize)
+                quantize=self.cfg.quantize, metrics=self.obs.registry)
             # a cold build's dispatches compile during this same query
             # anyway — drop its warm-shape backlog instead of re-tracing
             pack.drain_warm_shapes()
@@ -719,21 +767,41 @@ class SegmentManager:
             pack.sync_alive(self.alive)
             if self.epoch == epoch:
                 self._pack = pack
+                self._update_pack_gauges(pack)
             return _read_state(pack)
 
     def query(self, queries: np.ndarray, filt: Optional[Filter], k: int = 10,
-              ef: int = 64, return_stats: bool = False, **kw):
+              ef: int = 64, return_stats: bool = False,
+              return_trace: bool = False, **kw):
         """Unified fan-out query over the delta buffer + sealed segments;
-        see :func:`repro.streaming.query.query_segments`."""
+        see :func:`repro.streaming.query.query_segments`.
+
+        ``return_trace`` appends a finished
+        :class:`~repro.obs.trace.QueryTrace` to the result tuple — a span
+        tree decomposing this call's latency (delta scan, per-bucket
+        dispatch, rerank, merge) with every timer stopped only after
+        ``jax.block_until_ready``.  Tracing never changes results (see
+        ``tests/test_obs.py``)."""
         from .query import query_segments
-        return query_segments(self, queries, filt, k=k, ef=ef,
-                              return_stats=return_stats, **kw)
+        if not return_trace:
+            return query_segments(self, queries, filt, k=k, ef=ef,
+                                  return_stats=return_stats, **kw)
+        from ..obs.trace import QueryTrace
+        trace = QueryTrace("query")
+        out = query_segments(self, queries, filt, k=k, ef=ef,
+                             return_stats=return_stats, trace=trace, **kw)
+        return out + (trace.finish(),)
 
     def stats(self) -> dict:
-        """Lifecycle counters and per-segment occupancy for dashboards."""
+        """Lifecycle counters, per-segment occupancy, and the ``obs``
+        metrics block for dashboards.  Strict-JSON safe end-to-end:
+        ``json.dumps(stats, allow_nan=False)`` always succeeds — non-finite
+        values (the pre-first-ingest ``now`` watermark, unbounded segment
+        spans) follow the persistence layer's inf→null convention."""
+        from ..obs.metrics import json_sanitize
         with self._lock:
             pack = self._pack
-            return {
+            return json_sanitize({
                 "pack_nbytes": 0 if pack is None else int(pack.nbytes),
                 "pack_buckets": (pack.bucket_stats()
                                  if hasattr(pack, "bucket_stats") else {}),
@@ -749,5 +817,6 @@ class SegmentManager:
                 "quantize": self.cfg.quantize,
                 "store_resident_points": self.store.resident_points,
                 "store_nbytes": self.store.nbytes,
+                "obs": self.obs.snapshot(),
                 **self.counters,
-            }
+            })

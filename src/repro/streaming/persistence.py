@@ -65,6 +65,7 @@ import re
 import shutil
 import struct
 import threading
+import time
 import zlib
 from typing import Callable, List, Optional, Sequence, Tuple
 
@@ -72,6 +73,7 @@ import numpy as np
 
 from ..core import CubeGraphConfig
 from ..core.cubegraph import load_index, load_index_extras, save_index
+from ..obs.metrics import NULL_REGISTRY
 from .segments import SealedSegment
 
 __all__ = ["RestoreError", "WriteAheadLog", "StreamPersistence",
@@ -145,10 +147,12 @@ class WriteAheadLog:
     """
 
     def __init__(self, path: str, fsync_every: int = 32,
-                 fault_hook: Optional[Callable[[str], None]] = None):
+                 fault_hook: Optional[Callable[[str], None]] = None,
+                 metrics=None):
         self.path = path
         self.fsync_every = max(int(fsync_every), 1)
         self.fault_hook = fault_hook
+        self.metrics = NULL_REGISTRY if metrics is None else metrics
         self._since_sync = 0
         self._f = open(path, "ab", buffering=0)
         # a new OR empty file always gets the magic — appends to a
@@ -180,6 +184,7 @@ class WriteAheadLog:
         body = bytes([rec_type]) + payload
         frame = _FRAME.pack(len(body), zlib.crc32(body)) + body
         start = self._f.tell()
+        t0 = time.perf_counter()
         try:
             if self.fault_hook is not None:
                 mid = len(frame) // 2
@@ -198,13 +203,21 @@ class WriteAheadLog:
         self._since_sync += 1
         if self._since_sync >= self.fsync_every:
             self.sync()
+        # the append histogram includes the batched fsync when this record
+        # hit the batch boundary — that is the latency an acknowledged
+        # ingest actually pays, which is what the histogram is for
+        self.metrics.histogram("wal_append_ms").observe(
+            (time.perf_counter() - t0) * 1e3)
         return self._f.tell()
 
     def sync(self) -> None:
         """fsync pending appends (batch boundary)."""
+        t0 = time.perf_counter()
         self._f.flush()
         os.fsync(self._f.fileno())
         self._since_sync = 0
+        self.metrics.histogram("wal_fsync_ms").observe(
+            (time.perf_counter() - t0) * 1e3)
 
     def close(self) -> None:
         """Sync and release the file handle."""
@@ -365,10 +378,12 @@ class StreamPersistence:
     _ART_RE = re.compile(r"^seg-\d+-[vn](\d+)(?:\.tmp)?$")
 
     def __init__(self, root: str, fsync_every: int = 32,
-                 fault_hook: Optional[Callable[[str], None]] = None):
+                 fault_hook: Optional[Callable[[str], None]] = None,
+                 metrics=None):
         self.root = root
         self.fsync_every = max(int(fsync_every), 1)
         self.fault_hook = fault_hook
+        self.metrics = NULL_REGISTRY if metrics is None else metrics
         os.makedirs(root, exist_ok=True)
         self.version = 0
         self.wal: Optional[WriteAheadLog] = None
@@ -383,10 +398,12 @@ class StreamPersistence:
             man = load_manifest(root)
             self.version = int(man["version"])
             self.wal = WriteAheadLog(os.path.join(root, man["wal_file"]),
-                                     self.fsync_every, fault_hook)
+                                     self.fsync_every, fault_hook,
+                                     metrics=self.metrics)
         else:
             self.wal = WriteAheadLog(os.path.join(root, "wal-000000.log"),
-                                     self.fsync_every, fault_hook)
+                                     self.fsync_every, fault_hook,
+                                     metrics=self.metrics)
 
     # -- hot path ------------------------------------------------------
     def log_ingest(self, gid0: int, x, s) -> None:
@@ -440,6 +457,7 @@ class StreamPersistence:
         goes into ``state-<v>.npz``, the WAL rotates, and ``MANIFEST.json``
         swaps last — the single commit point.  Returns the manifest dict."""
         from ..distributed.segment_shards import bucket_cap_for
+        t_ckpt = time.perf_counter()
         v = self.version + 1
         seg_entries = []
         for seg in manager.segments:
@@ -471,7 +489,8 @@ class StreamPersistence:
         old_wal = self.wal
         old_wal.sync()
         new_wal = WriteAheadLog(os.path.join(self.root, wal_name),
-                                self.fsync_every, self.fault_hook)
+                                self.fsync_every, self.fault_hook,
+                                metrics=self.metrics)
 
         alive = np.ascontiguousarray(manager.alive)
         manifest = {
@@ -520,6 +539,9 @@ class StreamPersistence:
         self.wal = new_wal
         old_wal.close()
         self._cleanup(manifest)
+        self.metrics.counter("checkpoints_total").inc()
+        self.metrics.histogram("checkpoint_ms").observe(
+            (time.perf_counter() - t_ckpt) * 1e3)
         return manifest
 
     def _cleanup(self, manifest: dict) -> None:
@@ -703,7 +725,13 @@ def restore_manager(root: str, cfg=None, shard_mesh=None, resume: bool = True,
     # -- WAL tail: every acknowledged op after the checkpoint ----------
     wal_path = os.path.join(root, man["wal_file"])
     records, wal_end = WriteAheadLog.scan(wal_path, man["wal_offset"])
+    reg = mgr.obs.registry
+    reg.counter("recovery_restores_total").inc()
+    reg.counter("recovery_replayed_records_total").inc(len(records))
+    _REC_NAMES = {REC_INGEST: "ingest", REC_DELETE: "delete", REC_GC: "gc"}
     for rec_type, rec in records:
+        reg.counter('recovery_replayed_records_total'
+                    f'{{type="{_REC_NAMES[rec_type]}"}}').inc()
         if rec_type == REC_INGEST:
             gid0, x, s = rec
             if gid0 != mgr.store.n_total:
@@ -734,5 +762,6 @@ def restore_manager(root: str, cfg=None, shard_mesh=None, resume: bool = True,
                     f.truncate(wal_end)
         except OSError:                  # pragma: no cover - platform quirk
             pass
-        mgr.persist = StreamPersistence(root, cfg.wal_fsync_every)
+        mgr.persist = StreamPersistence(root, cfg.wal_fsync_every,
+                                        metrics=mgr.obs.registry)
     return mgr

@@ -34,6 +34,8 @@ from typing import List, Optional, Tuple
 import numpy as np
 
 from ..core import Filter
+from ..obs.metrics import NULL_REGISTRY
+from ..obs.trace import NULL_TRACE, block_ready
 from .segments import SegmentQueryStats
 
 __all__ = ["merge_topk", "temporal_bounds", "query_segments"]
@@ -84,7 +86,8 @@ def _alive_filter(manager, gids: np.ndarray, dists: np.ndarray
 
 def query_segments(manager, queries: np.ndarray, filt: Optional[Filter],
                    k: int = 10, ef: int = 64, return_stats: bool = False,
-                   use_shards: Optional[bool] = None, **search_kw):
+                   use_shards: Optional[bool] = None, trace=None,
+                   **search_kw):
     """Fan out one query batch across all live segments and merge top-k.
 
     Runs against a snapshot — ``(epoch, segment list, frozen delta copy)``
@@ -98,15 +101,30 @@ def query_segments(manager, queries: np.ndarray, filt: Optional[Filter],
 
     ``use_shards`` overrides ``StreamConfig.n_shards`` per call (True
     forces the sharded kernel scan, False the per-segment graph search).
+
+    All reported timings (``search_ms``, trace spans) stop their clocks
+    only after ``jax.block_until_ready`` on the dispatch results, so they
+    measure device work rather than JAX's async enqueue.  ``trace``
+    (``repro.obs.trace.QueryTrace``, or None for the shared no-op) opens
+    one span per phase — delta scan, per-bucket dispatch, rerank, merge —
+    and the manager's :class:`~repro.obs.metrics.BucketStats` accumulator
+    receives one per-bucket observation per sharded query.
     """
+    t_all = time.perf_counter()
     queries = np.atleast_2d(np.asarray(queries, np.float32))
     b = queries.shape[0]
+    trace = NULL_TRACE if trace is None else trace
+    obs = getattr(manager, "obs", None)
+    registry = obs.registry if obs is not None else NULL_REGISTRY
+    observe = (obs.bucket_stats.observe
+               if obs is not None and obs.bucket_stats is not None else None)
     t_lo, t_hi = temporal_bounds(filt, manager.time_dim)
     metric = manager.cfg.index_cfg.metric
     # one lock hold captures the whole consistent view: the segment list
     # (epoch guard) AND a frozen copy of the delta's live rows, so a racing
     # ingest/seal can never resize or reset the buffer mid-scan
-    epoch, segments, delta = manager.snapshot()
+    with trace.span("snapshot"):
+        epoch, segments, delta = manager.snapshot()
 
     blocks_g: List[np.ndarray] = []
     blocks_d: List[np.ndarray] = []
@@ -115,9 +133,11 @@ def query_segments(manager, queries: np.ndarray, filt: Optional[Filter],
     if delta.n_live > 0:
         st = delta.stats()
         if delta.t_max >= t_lo and delta.t_min <= t_hi:
-            t0 = time.perf_counter()
-            ids, dd = delta.query(queries, filt, k, metric=metric)
-            st.search_ms = (time.perf_counter() - t0) * 1e3
+            with trace.span("delta_scan", rows=delta.n_live):
+                t0 = time.perf_counter()
+                ids, dd = delta.query(queries, filt, k, metric=metric)
+                block_ready((ids, dd))
+                st.search_ms = (time.perf_counter() - t0) * 1e3
             blocks_g.append(ids)
             blocks_d.append(dd)
         else:
@@ -135,34 +155,45 @@ def query_segments(manager, queries: np.ndarray, filt: Optional[Filter],
         pack = manager.shard_pack(epoch, live_segs)
         dt_ms = 0.0
         if pack is not None:
-            t0 = time.perf_counter()
-            if isinstance(pack, PackView) and pack.quantize is not None:
-                # two-stage quantized read path: pack_search over-fetches
-                # rerank_multiple * k candidates from each unpruned
-                # bucket's int8 asymmetric-distance dispatch and reranks
-                # the union exactly at fp32 (original vectors from the
-                # point store) — one exact (gid, dist) block for the merge
-                gg, dd = pack_search(
-                    pack, queries, filt, k, t_lo=t_lo, t_hi=t_hi,
-                    metric=metric, lookup=manager.get_points,
-                    rerank_multiple=manager.cfg.rerank_multiple)
-                blocks_g.append(gg)
-                blocks_d.append(dd)
-            elif isinstance(pack, PackView):
-                # one fused dispatch per unpruned capacity bucket; every
-                # bucket block joins the same exact (gid, dist) merge as
-                # the delta block below
-                for gg, dd in pack_search_blocks(pack, queries, filt, k,
-                                                 t_lo=t_lo, t_hi=t_hi,
-                                                 metric=metric):
+            with trace.span("sealed_scan",
+                            quantized=getattr(pack, "quantize", None)
+                            is not None):
+                t0 = time.perf_counter()
+                if isinstance(pack, PackView) and pack.quantize is not None:
+                    # two-stage quantized read path: pack_search
+                    # over-fetches rerank_multiple * k candidates from
+                    # each unpruned bucket's int8 asymmetric-distance
+                    # dispatch and reranks the union exactly at fp32
+                    # (original vectors from the point store) — one exact
+                    # (gid, dist) block for the merge
+                    gg, dd = pack_search(
+                        pack, queries, filt, k, t_lo=t_lo, t_hi=t_hi,
+                        metric=metric, lookup=manager.get_points,
+                        rerank_multiple=manager.cfg.rerank_multiple,
+                        trace=trace, observe=observe)
                     blocks_g.append(gg)
                     blocks_d.append(dd)
-            else:                         # legacy monolithic pack
-                gg, dd = pack_search(pack, queries, filt, k, t_lo=t_lo,
-                                     t_hi=t_hi, metric=metric)
-                blocks_g.append(gg)
-                blocks_d.append(dd)
-            dt_ms = (time.perf_counter() - t0) * 1e3
+                elif isinstance(pack, PackView):
+                    # one fused dispatch per unpruned capacity bucket;
+                    # every bucket block joins the same exact (gid, dist)
+                    # merge as the delta block below
+                    for gg, dd in pack_search_blocks(
+                            pack, queries, filt, k, t_lo=t_lo, t_hi=t_hi,
+                            metric=metric, trace=trace, observe=observe):
+                        blocks_g.append(gg)
+                        blocks_d.append(dd)
+                else:                     # legacy monolithic pack
+                    gg, dd = pack_search(pack, queries, filt, k, t_lo=t_lo,
+                                         t_hi=t_hi, metric=metric,
+                                         trace=trace)
+                    blocks_g.append(gg)
+                    blocks_d.append(dd)
+                # the per-bucket spans above already blocked on their own
+                # results; this keeps the shared dispatch time honest even
+                # if a future path returns device arrays here
+                block_ready((blocks_g[-1] if blocks_g else None,
+                             blocks_d[-1] if blocks_d else None))
+                dt_ms = (time.perf_counter() - t0) * 1e3
         for seg in segments:
             st = seg.stats()
             if pack is None or seg.n_live == 0 \
@@ -178,18 +209,28 @@ def query_segments(manager, queries: np.ndarray, filt: Optional[Filter],
                 st.pruned = True
                 stats.append(st)
                 continue
-            t0 = time.perf_counter()
-            ids, dd = seg.query(queries, filt, k=k, ef=ef, **search_kw)
-            st.search_ms = (time.perf_counter() - t0) * 1e3
+            with trace.span("segment_scan", seg_id=seg.seg_id,
+                            rows=seg.n_live):
+                t0 = time.perf_counter()
+                ids, dd = seg.query(queries, filt, k=k, ef=ef, **search_kw)
+                block_ready((ids, dd))
+                st.search_ms = (time.perf_counter() - t0) * 1e3
             blocks_g.append(ids)
             blocks_d.append(np.asarray(dd))
             stats.append(st)
 
+    registry.counter("query_batches_total").inc()
+    registry.counter("query_rows_total").inc(b)
     if not blocks_g:
         out_g = np.full((b, k), -1, np.int64)
         out_d = np.full((b, k), np.inf, np.float32)
+        registry.histogram("query_ms").observe(
+            (time.perf_counter() - t_all) * 1e3)
         return (out_g, out_d, stats) if return_stats else (out_g, out_d)
 
-    out_g, out_d = merge_topk(blocks_g, blocks_d, k)
-    out_g, out_d = _alive_filter(manager, out_g, out_d)
+    with trace.span("merge", blocks=len(blocks_g)):
+        out_g, out_d = merge_topk(blocks_g, blocks_d, k)
+        out_g, out_d = _alive_filter(manager, out_g, out_d)
+    registry.histogram("query_ms").observe(
+        (time.perf_counter() - t_all) * 1e3)
     return (out_g, out_d, stats) if return_stats else (out_g, out_d)

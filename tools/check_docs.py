@@ -22,14 +22,16 @@ import sys
 
 REPO = pathlib.Path(__file__).resolve().parent.parent
 LINT_DIRS = ("src/repro/streaming", "src/repro/distributed",
-             "src/repro/quant")
+             "src/repro/quant", "src/repro/obs")
 # Files the docstring lint MUST cover — guards against a rename/move
 # silently dropping a linted subsystem out of LINT_DIRS.
 REQUIRED_LINTED = ("src/repro/streaming/persistence.py",
                    "src/repro/streaming/manager.py",
                    "src/repro/distributed/segment_shards.py",
                    "src/repro/quant/codec.py",
-                   "src/repro/quant/rerank.py")
+                   "src/repro/quant/rerank.py",
+                   "src/repro/obs/metrics.py",
+                   "src/repro/obs/trace.py")
 
 
 def check_bench_docs() -> list:
@@ -49,7 +51,8 @@ def check_readme_links() -> list:
     """README must link the architecture and benchmarks docs."""
     readme = (REPO / "README.md").read_text()
     errors = []
-    for target in ("docs/architecture.md", "docs/benchmarks.md"):
+    for target in ("docs/architecture.md", "docs/benchmarks.md",
+                   "docs/observability.md"):
         if not (REPO / target).exists():
             errors.append(f"{target} is missing")
         if target not in readme:

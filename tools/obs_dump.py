@@ -1,0 +1,128 @@
+#!/usr/bin/env python
+"""Render a CubeGraph observability snapshot as Prometheus text exposition.
+
+Input (positional, or stdin with ``-``) is a JSON file holding any of:
+
+* a ``DocumentStore.metrics_snapshot()`` export — ``{enabled, metrics,
+  buckets}``;
+* a full ``SegmentManager.stats()`` dump — the ``obs`` block is used and
+  the top-level liveness/occupancy numbers become gauges;
+* a bare ``MetricsRegistry.snapshot()`` — ``{counters, gauges,
+  histograms}``.
+
+Counters/gauges map 1:1; histograms are exposed as summaries (quantile
+labels + ``_sum``/``_count``); per-capacity ``BucketStats`` rows become
+``cubegraph_bucket_*{cap="..."}`` gauges so the planner-contract numbers
+(pruning rate, selectivity, scanned rows) are scrapeable per bucket.
+
+Usage::
+
+    PYTHONPATH=src python tools/obs_dump.py snapshot.json
+    PYTHONPATH=src python tools/obs_dump.py --demo      # tiny live workload
+
+``--demo`` ingests a small synthetic stream, runs a few filtered queries,
+and dumps the resulting snapshot — a smoke test for the whole export path.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+_REPO_SRC = __file__.rsplit("/", 2)[0] + "/src"
+if _REPO_SRC not in sys.path:           # allow running without PYTHONPATH
+    sys.path.insert(0, _REPO_SRC)
+
+from repro.obs import prometheus_text  # noqa: E402
+
+
+def bucket_text(buckets: dict, prefix: str = "cubegraph") -> str:
+    """``BucketStats.snapshot()`` -> per-capacity labeled gauge lines."""
+    lines = []
+    keys = sorted({k for row in buckets.values() for k in row})
+    for key in keys:
+        name = f"{prefix}_bucket_{key}"
+        lines.append(f"# TYPE {name} gauge")
+        for cap in sorted(buckets, key=int):
+            value = buckets[cap].get(key)
+            if value is None:
+                continue
+            lines.append(f'{name}{{cap="{cap}"}} {value}')
+    return "\n".join(lines) + ("\n" if lines else "")
+
+
+def _top_level_gauges(stats: dict, prefix: str = "cubegraph") -> str:
+    """Scalar ``stats()`` fields (liveness, pack bytes...) as gauges."""
+    lines = []
+    for key, value in sorted(stats.items()):
+        if key == "obs" or not isinstance(value, (int, float)) \
+                or isinstance(value, bool):
+            continue
+        lines.append(f"# TYPE {prefix}_{key} gauge")
+        lines.append(f"{prefix}_{key} {value}")
+    return "\n".join(lines) + ("\n" if lines else "")
+
+
+def render(blob: dict, prefix: str = "cubegraph") -> str:
+    """Dispatch on the snapshot shape and render everything it carries."""
+    out = []
+    if "obs" in blob:                    # full SegmentManager.stats()
+        out.append(_top_level_gauges(blob, prefix))
+        blob = blob["obs"]
+    if "metrics" in blob:                # StreamObs / metrics_snapshot()
+        out.append(prometheus_text(blob["metrics"], prefix))
+        out.append(bucket_text(blob.get("buckets", {}), prefix))
+    else:                                # bare registry snapshot
+        out.append(prometheus_text(blob, prefix))
+    return "".join(part for part in out if part)
+
+
+def _demo() -> dict:
+    """Tiny live workload whose snapshot exercises every metric family."""
+    import numpy as np
+
+    from repro.core import CubeGraphConfig, IntervalFilter
+    from repro.streaming import SegmentManager, StreamConfig
+
+    cfg = StreamConfig(time_dim=2, seal_max_points=256, n_shards=2,
+                       index_cfg=CubeGraphConfig(n_layers=2, m_intra=8,
+                                                 m_cross=4))
+    rng = np.random.default_rng(0)
+    mgr = SegmentManager(16, 3, cfg)
+    for i in range(4):
+        x = rng.normal(size=(200, 16)).astype(np.float32)
+        s = rng.uniform(size=(200, 3))
+        s[:, 2] = i + np.linspace(0, 0.9, 200)
+        mgr.ingest(x, s)
+    mgr.maintenance()
+    filt = IntervalFilter(dim=2, lo=0.5, hi=2.5)
+    for _ in range(4):
+        mgr.query(rng.normal(size=(4, 16)).astype(np.float32), filt, k=5)
+    return mgr.stats()
+
+
+def main(argv=None) -> int:
+    """CLI entry point."""
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("snapshot", nargs="?",
+                    help="JSON snapshot file ('-' for stdin)")
+    ap.add_argument("--demo", action="store_true",
+                    help="run a tiny live workload instead of reading a file")
+    ap.add_argument("--prefix", default="cubegraph",
+                    help="metric name prefix (default: cubegraph)")
+    args = ap.parse_args(argv)
+    if args.demo:
+        blob = _demo()
+    elif args.snapshot is None:
+        ap.error("provide a snapshot file or --demo")
+    elif args.snapshot == "-":
+        blob = json.load(sys.stdin)
+    else:
+        with open(args.snapshot) as f:
+            blob = json.load(f)
+    sys.stdout.write(render(blob, args.prefix))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
