@@ -1,0 +1,121 @@
+"""Exp-15: cost-based sealed read path — latency vs. resident corpus size.
+
+Sweeps the resident corpus size; at each size ONE manager ingests the
+stream, seals, and compacts (the read-optimized steady state: compaction
+merges per-segment graph components, which is what keeps traversal recall
+high as the corpus grows), then the same sealed pack is queried three
+ways via the per-call ``read_path`` override:
+
+  * ``scan`` — the fused-kernel bucket scan (exact; the pre-planner
+    baseline whose latency is linear in padded resident rows),
+  * ``graph`` — the stitched beam traversal forced everywhere a bucket
+    carries a usable graph (per-hop cost independent of corpus size, hop
+    count ~ log(points) — the sub-linear curve),
+  * ``auto`` — ``streaming.planner`` picking scan vs. traversal per
+    bucket per dispatch from BucketStats + :class:`PlannerCosts`.
+
+Each mode reports windowed-filter query latency and recall@10 against
+brute-force fp32 ground truth (the paper's operating point is
+recall@10 >= 0.95 — asserted for every recorded row), plus the planner's
+per-bucket decisions for the ``auto`` pass.  The harness overrides
+``PlannerCosts.hop_cost`` with a value calibrated for this CPU
+interpret-mode rig so the scan/graph crossover the model predicts matches
+the measured wall-clock crossover (scan cheaper at the small sizes, the
+traversal cheaper at the largest); ROADMAP item 5's measured rooflines
+replace these constants on real accelerators.  The ``scan_``/``graph_``
+baseline prefixes keep the BENCH_streaming.json digest summarizing only
+the production ``auto`` path (exp13's ``fp32_`` convention).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (BoxFilter, ComposeFilter, CubeGraphConfig,
+                        IntervalFilter)
+from repro.core.workloads import ground_truth, make_dataset, recall
+from repro.streaming import SegmentManager, StreamConfig
+from repro.streaming.planner import PlannerCosts
+
+from .common import BENCH_D, BENCH_Q, csv_row, record, timed_queries
+
+CFG = CubeGraphConfig(n_layers=3, m_intra=12, m_cross=4)
+# interpret-mode CPU calibration: measured on this rig, a traversal hop
+# costs ~150 padded-row scans, which places the modeled crossover between
+# the 12k point (scan measured cheaper) and the 36k point (traversal
+# measured ~2x cheaper) — matching wall clock
+COSTS = PlannerCosts(hop_cost=150.0)
+# all sizes >= seal_max_points so every swept point has sealed data for
+# the planner to route (below that the whole corpus sits in the delta
+# buffer and the sealed read path never dispatches)
+SIZES = (3_000, 12_000, 36_000)
+
+
+def _window(t_lo, t_hi):
+    return ComposeFilter(
+        BoxFilter(lo=np.zeros(3, np.float32), hi=np.ones(3, np.float32)),
+        IntervalFilter(dim=2, lo=np.float32(t_lo), hi=np.float32(t_hi)),
+        "and")
+
+
+def run():
+    d = BENCH_D
+    rng = np.random.default_rng(61)
+    out = {"d": d, "sizes": [], "planner_costs": {
+        "hop_cost": COSTS.hop_cost, "base_hops": COSTS.base_hops,
+        "hops_per_log2": COSTS.hops_per_log2,
+        "min_graph_rows": COSTS.min_graph_rows}}
+    f = _window(0.1, 0.95)
+    for n in SIZES:
+        x, s = make_dataset(n, d, 3, seed=60)
+        s[:, 2] = np.arange(n) / n
+        q = x[rng.integers(0, n, BENCH_Q)] \
+            + 0.05 * rng.normal(size=(BENCH_Q, d)).astype(np.float32)
+        gt, _ = ground_truth(x, s, q, f, 10)
+        row = {"n_points": n}
+        mgr = SegmentManager(d, 3, StreamConfig(
+            time_dim=2, seal_max_points=2048, n_shards=2,
+            compact_max_segments=3, read_path="auto",
+            planner_costs=COSTS, graph_ef=192, index_cfg=CFG))
+        mgr.ingest(x, s)
+        mgr.seal()
+        mgr.compact()
+        row["n_segments"] = len(mgr.segments)
+        for mode in ("scan", "graph", "auto"):
+            tag = "" if mode == "auto" else f"{mode}_"
+            rp = None if mode == "auto" else mode
+            dt, ids = timed_queries(
+                lambda: mgr.query(q, f, k=10, read_path=rp)[0], reps=5)
+            row[tag + "us_per_query"] = round(dt / BENCH_Q * 1e6, 1)
+            row[tag + "recall_at_10"] = round(recall(ids, gt), 4)
+            assert row[tag + "recall_at_10"] >= 0.95, (mode, n)
+            if mode == "auto":
+                plan = mgr.last_plan or {}
+                row["auto_modes"] = {str(cap): dec.mode
+                                     for cap, dec in sorted(plan.items())}
+        out["sizes"].append(row)
+        csv_row(f"exp15/n{n}", row["us_per_query"],
+                f"scan_us={row['scan_us_per_query']};"
+                f"graph_us={row['graph_us_per_query']};"
+                f"auto_modes={'+'.join(row['auto_modes'].values()) or '-'};"
+                f"recall={row['recall_at_10']}")
+
+    # scaling exponents: slope of log(latency) over log(n) across the sweep
+    # (1.0 = linear in corpus size; the planner's point is that auto's
+    # tail bends onto the traversal curve once the crossover is inside
+    # the swept range, so auto scales strictly better than the scan)
+    ln = np.log([r["n_points"] for r in out["sizes"]])
+    for tag in ("scan_", "graph_", ""):
+        lat = np.log([r[tag + "us_per_query"] for r in out["sizes"]])
+        out[(tag or "auto_") + "scaling_exponent"] = round(
+            float(np.polyfit(ln, lat, 1)[0]), 3)
+    assert out["auto_scaling_exponent"] < out["scan_scaling_exponent"]
+    csv_row("exp15/summary", 0.0,
+            f"scan_exp={out['scan_scaling_exponent']};"
+            f"graph_exp={out['graph_scaling_exponent']};"
+            f"auto_exp={out['auto_scaling_exponent']}")
+    record("exp15_read_path_planner", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -181,6 +181,7 @@ class CubeGraphIndex:
         width: int = 4,
         max_iters: int = 512,
         return_stats: bool = False,
+        tie_gids=None,                  # [n] optional (dist, gid) tie-break key
     ) -> Tuple[np.ndarray, np.ndarray]:
         t0 = time.perf_counter()
         level = self.select_layer(filt, layer)
@@ -200,7 +201,7 @@ class CubeGraphIndex:
         ids, dists = beam_search(
             self.x, self.s, self.norms, jnp.asarray(self.valid),
             jnp.asarray(lg.cube_of, jnp.int32), lg.all_nbrs,
-            queries, filt, active, seeds, params)
+            queries, filt, active, seeds, params, tie_key=tie_gids)
         ids = np.asarray(ids)
         dists = np.asarray(dists)
         t2 = time.perf_counter()

@@ -88,11 +88,12 @@ class SearchParams:
 
 @partial(jax.jit, static_argnames=("p",))
 def _beam_search(x, s, norms, valid, cube_of, all_nbrs,
-                 q, filt: Filter, active_cubes, seeds, p: SearchParams):
+                 q, filt: Filter, active_cubes, seeds, tie_key, p: SearchParams):
     """Core loop.  Shapes:
     x [n,d], s [n,m], norms [n], valid bool[n], cube_of int32[n],
     all_nbrs int32[n, deg], q [b,d], active_cubes int32[cmax] (-1 pad,
-    shared across the batch — one filter per call), seeds int32[e].
+    shared across the batch — one filter per call), seeds int32[e],
+    tie_key int32[n] or None (see ``beam_search``).
     Returns (ids [b,k], dists [b,k]) sorted ascending; -1/inf padded.
     """
     n, d = x.shape
@@ -210,7 +211,20 @@ def _beam_search(x, s, norms, valid, cube_of, all_nbrs,
 
     final = jax.lax.while_loop(cond, body, state)
     res_ids, res_d = final[3], final[4]
-    return jnp.where(jnp.isfinite(res_d), res_ids, -1), res_d
+    res_ids = jnp.where(jnp.isfinite(res_d), res_ids, -1)
+    # Deterministic (dist, tie-key) output order.  `lax.top_k` breaks
+    # distance ties by *position in the merge buffer*, which depends on the
+    # order candidates were encountered — i.e. on seed order, route mode, and
+    # (for duplicated vectors across segments) on segment order.  A final
+    # stable lexsort on (distance, key) pins the emitted list; the caller's
+    # global-id key makes the invariant hold across segments (mirrors
+    # `host_topk`'s np.lexsort((gid, dist)) tie-break on the merge side).
+    key = res_ids if tie_key is None else tie_key[jnp.maximum(res_ids, 0)]
+    key = jnp.where(res_ids >= 0, key, jnp.iinfo(jnp.int32).max)
+    order = jnp.lexsort((key, res_d), axis=-1)
+    res_ids = jnp.take_along_axis(res_ids, order, axis=1)
+    res_d = jnp.take_along_axis(res_d, order, axis=1)
+    return res_ids, res_d
 
 
 def beam_search(
@@ -218,13 +232,21 @@ def beam_search(
     cube_of: jnp.ndarray, all_nbrs: jnp.ndarray,
     queries: jnp.ndarray, filt: Filter,
     active_cubes: jnp.ndarray, seeds: jnp.ndarray,
-    params: SearchParams,
+    params: SearchParams, tie_key: Optional[jnp.ndarray] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Public entry point; see `_beam_search` for shapes."""
+    """Public entry point; see `_beam_search` for shapes.
+
+    ``tie_key`` (optional, int [n]) supplies a per-point sort key used only
+    to break exact distance ties in the final result ordering; pass the
+    segment's global ids so that duplicated vectors land in a stable
+    (dist, gid) order regardless of local id assignment.  Defaults to the
+    local id, which already makes a single index's output deterministic.
+    """
+    tk = None if tie_key is None else jnp.asarray(tie_key, jnp.int32)
     return _beam_search(
         jnp.asarray(x, jnp.float32), jnp.asarray(s, jnp.float32),
         jnp.asarray(norms, jnp.float32), jnp.asarray(valid, bool),
         jnp.asarray(cube_of, jnp.int32), jnp.asarray(all_nbrs, jnp.int32),
         jnp.asarray(queries, jnp.float32), filt,
         jnp.asarray(active_cubes, jnp.int32), jnp.asarray(seeds, jnp.int32),
-        params)
+        tk, params)

@@ -72,9 +72,9 @@ from ..kernels import (PAD_META, dispatch_trace_count, next_pow2,
 from ..obs.trace import NULL_TRACE, block_ready
 
 __all__ = ["BucketedShardPack", "PackView", "SegmentShardSource",
-           "ShardPack", "bucket_cap_for", "build_bucketed_pack",
-           "build_shard_pack", "host_topk", "make_shard_mesh",
-           "pack_search", "pack_search_blocks"]
+           "ShardPack", "bucket_cap_for", "bucket_graph_seeds",
+           "build_bucketed_pack", "build_shard_pack", "host_topk",
+           "make_shard_mesh", "pack_search", "pack_search_blocks"]
 
 _MPAD = 128                      # metadata lane padding (kernel layout)
 
@@ -99,6 +99,8 @@ class SegmentShardSource:
     codes: Optional[np.ndarray] = None    # [n, d] int8 segment codes
     scales: Optional[np.ndarray] = None   # [d] fp32 per-dim scales
     xsq: Optional[np.ndarray] = None      # [n] fp32 dequantized sq. norms
+    nbrs: Optional[np.ndarray] = None     # [n, deg] int32 local adjacency
+    entries: Optional[np.ndarray] = None  # [e] int32 local entry points
 
 
 def make_shard_mesh(n_devices: Optional[int] = None) -> Mesh:
@@ -312,6 +314,7 @@ class _SegEntry:
     gid_sorted: np.ndarray       # sorted gids of the segment's packed rows
     rows_sorted: np.ndarray      # bucket row per sorted gid
     cols_sorted: np.ndarray      # bucket column per sorted gid
+    entry_pos: Optional[np.ndarray] = None  # flattened graph entry positions
 
 
 @dataclasses.dataclass
@@ -336,6 +339,7 @@ class _Bucket:
     codes: Optional[jnp.ndarray] = None   # [rows, dq, cap] int8
     st: Optional[jnp.ndarray] = None      # [rows, mq, cap] fp32 (+xsq row)
     scales: Optional[jnp.ndarray] = None  # [rows, dq] fp32 per-dim scales
+    nbrs: Optional[jnp.ndarray] = None    # [rows, cap, degp] int32 adjacency
 
     @property
     def n_rows(self) -> int:
@@ -345,10 +349,11 @@ class _Bucket:
     @property
     def nbytes(self) -> int:
         """Device bytes held by this bucket's block."""
+        graph = 0 if self.nbrs is None else int(self.nbrs.size) * 4
         if self.codes is not None:
             return int(self.codes.size + (self.st.size + self.scales.size
-                                          + self.gids.size) * 4)
-        return int((self.x.size + self.s.size + self.gids.size) * 4)
+                                          + self.gids.size) * 4) + graph
+        return int((self.x.size + self.s.size + self.gids.size) * 4) + graph
 
 
 @dataclasses.dataclass(frozen=True)
@@ -370,11 +375,23 @@ class BucketView:
     codes: Optional[jnp.ndarray] = None
     st: Optional[jnp.ndarray] = None
     scales: Optional[jnp.ndarray] = None
+    nbrs: Optional[jnp.ndarray] = None    # [rows, cap, degp] int32 adjacency
+    # per-packed-segment graph entry points for the stitched traversal:
+    # ((row0, flattened positions), ...) — row0 identifies the owning slot's
+    # first bucket row, so the temporal active mask decides seed inclusion
+    entries: Tuple[Tuple[int, np.ndarray], ...] = ()
 
     @property
     def quantized(self) -> bool:
         """Whether this bucket holds int8 codes instead of fp32 blocks."""
         return self.codes is not None
+
+    @property
+    def graph_ready(self) -> bool:
+        """Whether this bucket carries a stitched graph block with at least
+        one segment exposing entry points (the graph read path's gate)."""
+        return self.nbrs is not None and any(
+            len(pos) for _, pos in self.entries)
 
     def active_rows(self, t_lo: float, t_hi: float) -> np.ndarray:
         """[rows] bool — allocated rows whose segment span overlaps the
@@ -418,7 +435,8 @@ class BucketedShardPack:
 
     def __init__(self, n_shards: int, d: int, m: int, epoch: int = 0,
                  mesh: Optional[Mesh] = None, cap_multiple: int = 256,
-                 quantize: Optional[str] = None, metrics=None):
+                 quantize: Optional[str] = None, metrics=None,
+                 graph_degree: Optional[int] = None):
         from ..obs.metrics import NULL_REGISTRY
         self.metrics = NULL_REGISTRY if metrics is None else metrics
         self.n_shards = max(int(n_shards), 1)
@@ -427,6 +445,13 @@ class BucketedShardPack:
         self.dpad = round_up(d, 128)
         self.dq = round_up(d, 32)           # int8 code sublane padding
         self.mq = quant_meta_rows(m)         # meta sublanes (+1 xsq row)
+        # graph read path: when set, every bucket also carries a
+        # [rows, cap, degp] adjacency block of flattened bucket positions
+        # (row * cap + col), staged from each segment's sealed CubeGraph
+        # layer at add time; None keeps the pack byte-for-byte scan-only
+        self.graph_degree = None if not graph_degree else int(graph_degree)
+        self.degp = (round_up(max(self.graph_degree, 1), 8)
+                     if self.graph_degree else 0)
         self.epoch = int(epoch)
         self.mesh = mesh
         self.cap_multiple = max(int(cap_multiple), 8)
@@ -478,17 +503,24 @@ class BucketedShardPack:
 
     def _new_block(self, rows: int, cap: int):
         """Fresh zero/PAD device arrays for ``rows`` bucket rows, in the
-        layout the pack's mode needs (fp32 blocks or int8 code blocks)."""
+        layout the pack's mode needs (fp32 blocks or int8 code blocks),
+        plus the adjacency block when the graph read path is on."""
         g = self._place(jnp.full((rows, cap), -1, jnp.int32))
         if self.quantize:
             c = self._place(jnp.zeros((rows, self.dq, cap), jnp.int8))
             st = self._place(jnp.full((rows, self.mq, cap), PAD_META,
                                       jnp.float32))
             sc = self._place(jnp.zeros((rows, self.dq), jnp.float32))
-            return dict(codes=c, st=st, scales=sc, gids=g)
-        x = self._place(jnp.zeros((rows, cap, self.dpad), jnp.float32))
-        s = self._place(jnp.full((rows, cap, _MPAD), PAD_META, jnp.float32))
-        return dict(x=x, s=s, gids=g)
+            out = dict(codes=c, st=st, scales=sc, gids=g)
+        else:
+            x = self._place(jnp.zeros((rows, cap, self.dpad), jnp.float32))
+            s = self._place(jnp.full((rows, cap, _MPAD), PAD_META,
+                                     jnp.float32))
+            out = dict(x=x, s=s, gids=g)
+        if self.graph_degree:
+            out["nbrs"] = self._place(jnp.full((rows, cap, self.degp), -1,
+                                               jnp.int32))
+        return out
 
     def _note_shape(self, rows: int, cap: int) -> None:
         """Record a freshly created block geometry for compile warming.
@@ -602,6 +634,37 @@ class BucketedShardPack:
             stb[sh, self.mq - 1, :nn] = xsq[idx]
         return dict(codes=cb, st=stb, scales=scb)
 
+    def _stage_graph(self, src: SegmentShardSource, cap: int, row0: int):
+        """Host-stage one segment's adjacency as a ``[n_shards, cap, degp]``
+        block of *flattened bucket positions* (``row * cap + col``), plus
+        the segment's entry points in the same coordinate space.
+
+        Positions bake in the slot's ``row0``, so they survive later block
+        doubling (cap is fixed per bucket; growth only appends rows).
+        Segments packed without a graph payload (e.g. sources rebuilt from
+        an old snapshot) stage an all ``-1`` block and no entries — the
+        planner then keeps that bucket on the scan path."""
+        n = len(src.gids)
+        nb = np.full((self.n_shards, cap, self.degp), -1, np.int32)
+        entry_pos = np.empty(0, np.int64)
+        if src.nbrs is not None and n:
+            l = np.arange(n)
+            pos_of = ((row0 + l % self.n_shards) * cap
+                      + l // self.n_shards).astype(np.int64)
+            deg = min(src.nbrs.shape[1], self.degp)
+            nbr = np.asarray(src.nbrs[:, :deg], np.int64)
+            npos = np.where(nbr >= 0, pos_of[np.minimum(np.maximum(nbr, 0),
+                                                        n - 1)],
+                            -1).astype(np.int32)
+            for sh in range(self.n_shards):
+                idx = np.arange(sh, n, self.n_shards)
+                nb[sh, : len(idx), :deg] = npos[idx]
+            if src.entries is not None and len(src.entries):
+                e = np.asarray(src.entries, np.int64)
+                e = e[(e >= 0) & (e < n)]
+                entry_pos = pos_of[e]
+        return nb, entry_pos
+
     def add_segment(self, src: SegmentShardSource) -> None:
         """Append one segment's live points into its capacity bucket:
         O(segment) host staging + one ``dynamic_update_slice`` per device
@@ -617,6 +680,9 @@ class BucketedShardPack:
         row0 = slot * self.n_shards
         staged = (self._stage_quant(src, cap) if self.quantize
                   else self._stage_fp32(src, cap))
+        entry_pos = None
+        if self.graph_degree:
+            staged["nbrs"], entry_pos = self._stage_graph(src, cap, row0)
         gb = np.full((self.n_shards, cap), -1, np.int32)
         for sh in range(self.n_shards):
             idx = np.arange(sh, n, self.n_shards)
@@ -639,7 +705,8 @@ class BucketedShardPack:
             int(src.seg_id), cap, slot,
             np.asarray(src.gids, np.int64)[order],
             (row0 + order % self.n_shards).astype(np.int64),
-            (order // self.n_shards).astype(np.int64))
+            (order // self.n_shards).astype(np.int64),
+            entry_pos=entry_pos)
 
     def remove_segment(self, seg_id: int) -> bool:
         """Tombstone one segment (compaction victim or expiry): host-only —
@@ -731,10 +798,16 @@ class BucketedShardPack:
         for cap in sorted(self.buckets):
             b = self.buckets[cap]
             if (b.seg_ids >= 0).any():
+                entries = tuple(
+                    (e.slot * self.n_shards, e.entry_pos)
+                    for e in self._entries.values()
+                    if e.cap == cap and e.entry_pos is not None
+                    and len(e.entry_pos))
                 views.append(BucketView(cap, b.gids, b.seg_ids.copy(),
                                         b.t_min.copy(), b.t_max.copy(),
                                         x=b.x, s=b.s, codes=b.codes,
-                                        st=b.st, scales=b.scales))
+                                        st=b.st, scales=b.scales,
+                                        nbrs=b.nbrs, entries=entries))
         return PackView(self.epoch, self.n_shards, self.m, tuple(views),
                         self.nbytes, quantize=self.quantize)
 
@@ -743,7 +816,9 @@ def build_bucketed_pack(sources: Sequence[SegmentShardSource], n_shards: int,
                         epoch: int = 0, mesh: Optional[Mesh] = None,
                         cap_multiple: int = 256,
                         quantize: Optional[str] = None,
-                        metrics=None) -> BucketedShardPack:
+                        metrics=None,
+                        graph_degree: Optional[int] = None
+                        ) -> BucketedShardPack:
     """Cold-build a :class:`BucketedShardPack` (restore / first query /
     bucket-geometry change): the same :meth:`~BucketedShardPack.add_segment`
     delta applied once per segment, so an incrementally maintained pack and
@@ -753,10 +828,24 @@ def build_bucketed_pack(sources: Sequence[SegmentShardSource], n_shards: int,
     pack = BucketedShardPack(n_shards, sources[0].x.shape[1],
                              sources[0].s.shape[1], epoch=epoch, mesh=mesh,
                              cap_multiple=cap_multiple, quantize=quantize,
-                             metrics=metrics)
+                             metrics=metrics, graph_degree=graph_degree)
     for src in sources:
         pack.add_segment(src)
     return pack
+
+
+def bucket_graph_seeds(bv: BucketView, t_lo: float, t_hi: float
+                       ) -> np.ndarray:
+    """Flattened seed positions for one bucket's stitched traversal: the
+    union of graph entry points of every temporally active packed segment
+    (this is the stitching rule — one beam, seeded in every unpruned
+    segment's component, instead of per-segment sub-searches)."""
+    if bv.nbrs is None or not bv.entries:
+        return np.empty(0, np.int64)
+    active = bv.active_rows(t_lo, t_hi)
+    parts = [pos for row0, pos in bv.entries
+             if row0 < len(active) and active[row0]]
+    return np.concatenate(parts) if parts else np.empty(0, np.int64)
 
 
 def host_topk(g: np.ndarray, d: np.ndarray, k: int

@@ -47,13 +47,18 @@ class DocumentStore:
     segments + exact fp32 rerank — ~4x more resident corpus per device
     byte): it overlays ``stream_cfg.quantize`` and forces the sharded read
     path on, since the quantized scan rides the bucketed shard pack.
+    ``read_path="auto"|"graph"`` overlays ``stream_cfg.read_path`` the same
+    way, turning on the cost-based sealed read path (scan vs. stitched
+    graph traversal per bucket — ``repro.streaming.planner``), which also
+    rides the bucketed pack and so forces sharding on.
     """
 
     def __init__(self, docs: Sequence[Document],
                  index_cfg: CubeGraphConfig = CubeGraphConfig(),
                  streaming: bool = False,
                  stream_cfg: Optional[StreamConfig] = None,
-                 shard_mesh=None, quantize: Optional[str] = None):
+                 shard_mesh=None, quantize: Optional[str] = None,
+                 read_path: Optional[str] = None):
         self.docs = list(docs)
         self.streaming = bool(streaming)
         x = np.stack([d.embedding for d in self.docs]).astype(np.float32)
@@ -65,6 +70,10 @@ class DocumentStore:
                 stream_cfg = dataclasses.replace(
                     stream_cfg, quantize=quantize,
                     n_shards=max(stream_cfg.n_shards, 1))
+            if read_path is not None:
+                stream_cfg = dataclasses.replace(
+                    stream_cfg, read_path=read_path,
+                    n_shards=max(stream_cfg.n_shards, 1))
             self.manager = SegmentManager(x.shape[1], s.shape[1], stream_cfg,
                                           shard_mesh=shard_mesh)
             self.manager.ingest(x, s)
@@ -72,6 +81,9 @@ class DocumentStore:
         else:
             if quantize is not None:
                 raise ValueError("quantize requires a streaming store "
+                                 "(DocumentStore(streaming=True))")
+            if read_path is not None and read_path != "scan":
+                raise ValueError("read_path requires a streaming store "
                                  "(DocumentStore(streaming=True))")
             self.manager = None
             self.index = CubeGraphIndex.build(x, s, index_cfg)

@@ -86,6 +86,24 @@ class StreamConfig:
     # bit-for-bit unchanged — the A/B baseline for exp13.
     quantize: Optional[str] = None
     rerank_multiple: int = 4              # quantized over-fetch factor
+    # Cost-based sealed read path (requires n_shards >= 1 and
+    # incremental_pack).  "scan" (default) always dispatches the fused
+    # (quantized) kernel scan — byte-for-byte the pre-planner behavior.
+    # "graph" / "auto" additionally stage each sealed segment's coarsest
+    # CubeGraph layer (adjacency + entry points) into the bucketed pack at
+    # seal/compaction-publish and traverse it with the stitched Pallas beam
+    # search (kernels/graph_topk): "graph" forces traversal wherever a
+    # bucket carries a usable graph, "auto" lets streaming.planner pick
+    # scan vs. traversal per bucket per dispatch from BucketStats + cost
+    # estimates (PlannerCosts).  The planner never changes scan answers —
+    # see tests/test_planner.py's parity property.
+    read_path: str = "scan"
+    planner_costs: Optional[object] = None  # PlannerCosts override (None =
+                                            # defaults; replaced by measured
+                                            # rooflines in ROADMAP item 5)
+    graph_ef: int = 128                   # traversal beam width
+    graph_width: int = 8                  # expansions per traversal hop
+    graph_max_iters: int = 256            # traversal hop budget
     # Pre-trace the per-bucket kernel dispatch when a bucket block is
     # created or doubles, at seal/publish time (off the query path), so
     # the first query after a growth pays no trace (exp12's residual
@@ -156,6 +174,17 @@ class SegmentManager:
             if not cfg.incremental_pack:
                 raise ValueError("quantize requires incremental_pack=True "
                                  "(the legacy monolithic pack is fp32-only)")
+        if cfg.read_path not in ("scan", "graph", "auto"):
+            raise ValueError(f"unknown read_path {cfg.read_path!r}; "
+                             "supported: 'scan' | 'graph' | 'auto'")
+        if cfg.read_path != "scan":
+            if cfg.n_shards < 1:
+                raise ValueError("read_path='graph'/'auto' requires the "
+                                 "sharded read path (n_shards >= 1)")
+            if not cfg.incremental_pack:
+                raise ValueError("read_path='graph'/'auto' requires "
+                                 "incremental_pack=True (graph blocks ride "
+                                 "the bucketed pack)")
         self.time_dim = cfg.time_dim % m
         self.delta = DeltaBuffer(d, m, self.time_dim,
                                  capacity=min(cfg.seal_max_points, 4096))
@@ -171,6 +200,9 @@ class SegmentManager:
         # cfg.incremental_pack is off).  None until the first sharded
         # query cold-builds it — including after restore().
         self._pack = None
+        # Most recent {cap: PlanDecision} from the cost-based planner
+        # (read_path != "scan" only) — exposed for tests/observability.
+        self.last_plan = None
         self.store = PointStore(d, m, chunk=cfg.store_chunk)
         self._alive = np.zeros(1024, bool)
         self.now = -math.inf                        # event-time watermark
@@ -360,13 +392,35 @@ class SegmentManager:
         of different lengths when a delete races it (the row set itself is
         reconciled later by ``sync_alive``, as for the fp32 path)."""
         from ..distributed.segment_shards import SegmentShardSource
-        xl, sl, gl, quant = seg.live_snapshot()
+        nbrs = entries = None
+        if self.cfg.read_path != "scan":
+            xl, sl, gl, quant, graph = seg.live_snapshot(with_graph=True)
+            nbrs, entries = graph.nbrs, graph.entries
+        else:
+            xl, sl, gl, quant = seg.live_snapshot()
         codes = scales = xsq = None
         if self.cfg.quantize is not None and quant is not None:
             codes, scales, xsq = quant.codes, quant.scales, quant.xsq
         return SegmentShardSource(seg.seg_id, xl, sl, gl, seg.t_min,
                                   seg.t_max, codes=codes, scales=scales,
-                                  xsq=xsq)
+                                  xsq=xsq, nbrs=nbrs, entries=entries)
+
+    @property
+    def graph_degree(self) -> Optional[int]:
+        """Adjacency width staged into pack graph blocks (None = scan-only
+        pack).  Segments flatten their hierarchical index into the union
+        of every layer's edges (``SealedSegment._live_graph``), so the
+        bound is ``n_layers`` times one layer's ``all_nbrs`` width (intra
+        degree + cross-edge budget), capped at 64: after per-point dedupe
+        the real unique degree sits well below the bound, and every padded
+        ``-1`` lane is wasted gather/score work in each traversal hop, so
+        the cap trims tail edges of the few highest-degree points instead
+        of paying for them on every hop."""
+        if self.cfg.read_path == "scan":
+            return None
+        ic = self.cfg.index_cfg
+        return min(64, int(ic.n_layers
+                           * (ic.m_intra + 2 * self.m * ic.m_cross)))
 
     def _warm_pack(self) -> int:
         """Pre-trace the kernel dispatch for bucket blocks the last pack
@@ -401,7 +455,8 @@ class SegmentManager:
         from ..distributed.segment_shards import BucketedShardPack
         if (self.cfg.n_shards < 1 or not self.cfg.incremental_pack
                 or not isinstance(pack, BucketedShardPack)
-                or pack.quantize != self.cfg.quantize):
+                or pack.quantize != self.cfg.quantize
+                or getattr(pack, "graph_degree", None) != self.graph_degree):
             self._pack = None
             return
         try:
@@ -756,7 +811,8 @@ class SegmentManager:
             pack = build_bucketed_pack(
                 sources, self.cfg.n_shards, epoch, mesh=self.shard_mesh,
                 cap_multiple=self.cfg.pack_cap_multiple,
-                quantize=self.cfg.quantize, metrics=self.obs.registry)
+                quantize=self.cfg.quantize, metrics=self.obs.registry,
+                graph_degree=self.graph_degree)
             # a cold build's dispatches compile during this same query
             # anyway — drop its warm-shape backlog instead of re-tracing
             pack.drain_warm_shapes()

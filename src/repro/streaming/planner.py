@@ -1,0 +1,159 @@
+"""Cost-based read-path planner: scan vs. stitched graph traversal.
+
+The sealed-segment read path has two per-bucket modes (ROADMAP item 1):
+
+* **scan** — the fused (possibly int8) filtered top-k kernel over the whole
+  bucket block: cost linear in ``active_rows * cap`` padded rows, fully
+  regular, exact (quantized buckets rerank).
+* **graph** — the stitched beam traversal (``kernels/graph_topk``) over the
+  bucket's adjacency block: cost roughly ``hops * width * degree`` gathers,
+  i.e. near-logarithmic in bucket points, but approximate and wasteful
+  when the filter is so selective that routing mostly burns hops on
+  φ-failing points.
+
+This module picks the mode *per bucket per dispatch* from the rolling
+:class:`~repro.obs.metrics.BucketStats` snapshot (the observation feed PR 6
+added exactly for this) plus the bucket's geometry.  All constants live in
+one :class:`PlannerCosts` dataclass so ROADMAP item 5's measured rooflines
+can replace the guesses without touching the decision logic.
+
+Contract with ``obs/metrics.py``: a per-bucket stats snapshot exposes at
+least :data:`REQUIRED_STATS_KEYS` — pinned by ``tests/test_planner.py`` so
+a metrics-side rename fails loudly instead of silently degrading planning.
+
+The planner only *prices* the modes; it never changes answers on its own:
+whenever it picks scan, the dispatch is byte-for-byte the forced-scan one
+(the parity property in ``tests/test_planner.py``), and graph picks are
+gated on the bucket actually carrying a graph block with live seeds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional
+
+import numpy as np
+
+__all__ = ["PlannerCosts", "PlanDecision", "READ_PATHS",
+           "REQUIRED_STATS_KEYS", "decide_bucket", "plan_read_paths"]
+
+READ_PATHS = ("auto", "scan", "graph")
+
+# Snapshot keys the planner consumes — the BucketStats schema contract.
+REQUIRED_STATS_KEYS = ("rows", "rows_scanned", "blocks_pruned",
+                       "candidates", "candidate_slots", "dispatches",
+                       "queries", "cache_hits", "cache_misses",
+                       "pruning_rate", "selectivity")
+
+
+@dataclasses.dataclass(frozen=True)
+class PlannerCosts:
+    """Planner constants, in one place (placeholder rooflines).
+
+    Units are abstract "row-visit equivalents"; only ratios matter.  The
+    defaults make graph win once a bucket's padded scan rows exceed a few
+    thousand — conservative for interpret-mode CPU, and meant to be
+    replaced by measured rooflines (ROADMAP item 5).
+    """
+
+    scan_cost_per_row: float = 1.0      # per padded scanned row
+    hop_cost: float = 120.0             # per traversal hop (gather+kernel)
+    base_hops: float = 12.0             # fixed hops (seed scoring etc.)
+    hops_per_log2: float = 10.0         # extra hops per log2(bucket points)
+    seed_cost: float = 0.5              # per stitched seed position
+    min_selectivity: float = 0.02       # below this, φ starves routing:
+                                        # force scan (traversal would burn
+                                        # hops on φ-failing candidates)
+    min_graph_rows: int = 512           # don't bother traversing tiny
+                                        # buckets — scan is one cheap
+                                        # dispatch there
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanDecision:
+    """One bucket's planned mode plus the estimates behind it."""
+
+    cap: int
+    mode: str                           # "scan" | "graph"
+    est_scan: float
+    est_graph: float
+    reason: str
+
+
+def estimate_scan_cost(cap: int, active_rows: int,
+                       costs: PlannerCosts) -> float:
+    """Padded-row scan cost: linear in the temporally unpruned rows."""
+    return float(active_rows) * float(cap) * costs.scan_cost_per_row
+
+
+def estimate_graph_cost(cap: int, active_rows: int, n_seeds: int,
+                        costs: PlannerCosts) -> float:
+    """Expected traversal cost: seeds plus hops ~ log2(bucket points)."""
+    n_points = max(float(active_rows) * float(cap), 2.0)
+    hops = costs.base_hops + costs.hops_per_log2 * math.log2(n_points)
+    return hops * costs.hop_cost + float(n_seeds) * costs.seed_cost
+
+
+def decide_bucket(cap: int, active_rows: int, n_seeds: int,
+                  graph_ready: bool, stats: Optional[Dict],
+                  costs: PlannerCosts, read_path: str = "auto"
+                  ) -> PlanDecision:
+    """Pick scan vs. graph for one bucket dispatch.
+
+    ``stats`` is this bucket's entry from a ``BucketStats`` snapshot (or
+    ``None`` before any observation); only :data:`REQUIRED_STATS_KEYS` are
+    consulted.  ``graph_ready`` and ``n_seeds`` gate the graph mode: a
+    bucket without a staged adjacency block or without live entry points
+    always scans regardless of cost (answers must never depend on a
+    missing structure).
+    """
+    est_scan = estimate_scan_cost(cap, active_rows, costs)
+    est_graph = estimate_graph_cost(cap, active_rows, n_seeds, costs)
+    can_graph = graph_ready and n_seeds > 0
+    if not can_graph:
+        return PlanDecision(cap, "scan", est_scan, est_graph, "graph_unready")
+    if read_path == "scan":
+        return PlanDecision(cap, "scan", est_scan, est_graph, "forced")
+    if read_path == "graph":
+        return PlanDecision(cap, "graph", est_scan, est_graph, "forced")
+    if active_rows * cap < costs.min_graph_rows:
+        return PlanDecision(cap, "scan", est_scan, est_graph, "small_bucket")
+    if stats is not None:
+        sel = stats["selectivity"]
+        if sel is not None and sel < costs.min_selectivity:
+            return PlanDecision(cap, "scan", est_scan, est_graph,
+                                "selective_filter")
+    if est_graph < est_scan:
+        return PlanDecision(cap, "graph", est_scan, est_graph, "cheaper")
+    return PlanDecision(cap, "scan", est_scan, est_graph, "cheaper")
+
+
+def plan_read_paths(view, read_path: str, stats_snapshot: Dict,
+                    costs: PlannerCosts, t_lo: float, t_hi: float,
+                    graph_allowed: bool = True) -> Dict[int, PlanDecision]:
+    """Plan every bucket of a :class:`~..distributed.segment_shards.PackView`.
+
+    ``stats_snapshot`` is ``BucketStats.snapshot()`` (keys are ``str(cap)``);
+    ``graph_allowed=False`` (e.g. the filter has no kernel encoding, so the
+    traversal kernel cannot evaluate φ) forces scan everywhere.  Buckets
+    whose rows are all temporally pruned are skipped — no dispatch happens
+    for them in either mode.
+    """
+    from ..distributed.segment_shards import bucket_graph_seeds
+    plan: Dict[int, PlanDecision] = {}
+    for bv in view.buckets:
+        active = bv.active_rows(t_lo, t_hi)
+        n_active = int(np.count_nonzero(active))
+        if n_active == 0:
+            continue
+        if not graph_allowed:
+            plan[bv.cap] = PlanDecision(
+                bv.cap, "scan", estimate_scan_cost(bv.cap, n_active, costs),
+                float("inf"), "filter_not_encodable")
+            continue
+        seeds = bucket_graph_seeds(bv, t_lo, t_hi)
+        plan[bv.cap] = decide_bucket(bv.cap, n_active, len(seeds),
+                                     bv.graph_ready,
+                                     stats_snapshot.get(str(bv.cap)),
+                                     costs, read_path)
+    return plan

@@ -25,6 +25,18 @@ kernel over int8 codes and over-fetch ``rerank_multiple * k`` candidates,
 which are reranked exactly at fp32 (``repro.quant.rerank``) before
 entering the same merge — so the merged block is exact again and the
 delta buffer / liveness semantics are untouched.
+
+With ``StreamConfig(read_path="auto"|"graph")`` each sealed-pack dispatch
+first runs the cost planner (``repro.streaming.planner``) over the pack's
+buckets: buckets planned ``scan`` go through the exact same fused-kernel
+calls as above (byte-for-byte — the planner never changes scan answers),
+while buckets planned ``graph`` run the stitched beam traversal
+(``repro.kernels.graph_topk``) seeded with the entry points of every
+temporally unpruned segment resident in the bucket.  fp32 graph blocks
+carry exact distances and join the merge directly; quantized graph blocks
+are candidate sets that go through the same exact fp32 rerank as the scan
+path.  Traversal results are approximate (recall target, not parity), so
+``auto`` only picks graph where the planner prices it cheaper.
 """
 from __future__ import annotations
 
@@ -84,9 +96,106 @@ def _alive_filter(manager, gids: np.ndarray, dists: np.ndarray
     return gids, dists
 
 
+def _plan_pack(manager, pack, filt, rp, t_lo, t_hi, obs, registry):
+    """Run the cost planner over one ``PackView`` dispatch.
+
+    Returns ``(plan, graph_caps)`` where ``graph_caps`` is the set of bucket
+    capacities routed to the stitched traversal this dispatch.  Also records
+    the plan on ``manager.last_plan`` and bumps the
+    ``planner_decision_total{mode=...}`` counters — one increment per bucket
+    decision, labelled like the pack gauges in ``obs/metrics.py``.
+    """
+    from ..kernels.ops import encode_filter
+    from .planner import PlannerCosts, plan_read_paths
+    costs = manager.cfg.planner_costs or PlannerCosts()
+    snap = (obs.bucket_stats.snapshot()
+            if obs is not None and obs.bucket_stats is not None else {})
+    # a filter the kernels cannot encode falls back to the host scan path
+    # everywhere; the traversal kernel shares the same φ encoding, so it
+    # is equally unavailable — force scan across the whole pack
+    graph_ok = encode_filter(filt, pack.m) is not None
+    plan = plan_read_paths(pack, rp, snap, costs, t_lo, t_hi,
+                           graph_allowed=graph_ok)
+    manager.last_plan = plan
+    for dec in plan.values():
+        registry.counter(
+            f'planner_decision_total{{mode="{dec.mode}"}}').inc()
+    graph_caps = frozenset(c for c, dec in plan.items()
+                           if dec.mode == "graph")
+    return plan, graph_caps
+
+
+def _graph_search_blocks(manager, pack, buckets, queries, filt, k,
+                         t_lo, t_hi, metric, trace, registry):
+    """Stitched-traversal dispatch for the buckets the planner sent to
+    ``graph`` mode.
+
+    fp32 buckets yield exact ``(gid, dist)`` blocks; quantized buckets
+    yield over-fetched candidate blocks that are reranked exactly at fp32
+    (union across graph buckets — gids are disjoint) before joining the
+    merge.  A bucket whose traversal is unavailable after all (filter not
+    encodable, no live seeds — the planner should have gated these) falls
+    back to the ordinary scan for that bucket alone.  Returns
+    ``(blocks_g, blocks_d)`` lists.
+    """
+    import dataclasses as _dc
+
+    from ..distributed.segment_shards import (bucket_graph_seeds,
+                                              pack_search, pack_search_blocks)
+    from ..kernels.graph_topk import bucket_graph_topk
+    cfg = manager.cfg
+    quantized = pack.quantize is not None
+    kk = max(k, cfg.rerank_multiple * k if quantized else k)
+    blocks_g: List[np.ndarray] = []
+    blocks_d: List[np.ndarray] = []
+    cand_g: List[np.ndarray] = []
+    for bv in buckets:
+        seeds = bucket_graph_seeds(bv, t_lo, t_hi)
+        with trace.span("bucket_graph", cap=bv.cap, seeds=int(len(seeds))):
+            out = bucket_graph_topk(
+                queries, bv, seeds, filt, kk, m=pack.m, metric=metric,
+                ef=max(cfg.graph_ef, kk), width=cfg.graph_width,
+                max_iters=cfg.graph_max_iters)
+            if out is not None:
+                block_ready(out[:2])
+        if out is None:                       # planner gate raced/failed
+            sub = _dc.replace(pack, buckets=(bv,))
+            if quantized:
+                gg, dd = pack_search(
+                    sub, queries, filt, k, t_lo=t_lo, t_hi=t_hi,
+                    metric=metric, lookup=manager.get_points,
+                    rerank_multiple=cfg.rerank_multiple, trace=trace)
+                blocks_g.append(gg)
+                blocks_d.append(dd)
+            else:
+                for gg, dd in pack_search_blocks(
+                        sub, queries, filt, k, t_lo=t_lo, t_hi=t_hi,
+                        metric=metric, trace=trace):
+                    blocks_g.append(gg)
+                    blocks_d.append(dd)
+            continue
+        gg, dd, hops = out
+        registry.histogram("graph_hops").observe(float(hops))
+        if quantized:
+            cand_g.append(np.asarray(gg))
+        else:
+            blocks_g.append(np.asarray(gg))
+            blocks_d.append(np.asarray(dd))
+    if cand_g:
+        from ..quant.rerank import rerank_exact
+        with trace.span("graph_rerank",
+                        candidates=int(sum(g.shape[1] for g in cand_g))):
+            gg, dd = rerank_exact(queries, np.concatenate(cand_g, axis=1),
+                                  k, manager.get_points, metric=metric)
+        blocks_g.append(gg)
+        blocks_d.append(dd)
+    return blocks_g, blocks_d
+
+
 def query_segments(manager, queries: np.ndarray, filt: Optional[Filter],
                    k: int = 10, ef: int = 64, return_stats: bool = False,
                    use_shards: Optional[bool] = None, trace=None,
+                   read_path: Optional[str] = None,
                    **search_kw):
     """Fan out one query batch across all live segments and merge top-k.
 
@@ -101,6 +210,11 @@ def query_segments(manager, queries: np.ndarray, filt: Optional[Filter],
 
     ``use_shards`` overrides ``StreamConfig.n_shards`` per call (True
     forces the sharded kernel scan, False the per-segment graph search).
+    ``read_path`` overrides ``StreamConfig.read_path`` per call
+    (``"scan"`` | ``"graph"`` | ``"auto"``): anything but ``"scan"`` runs
+    the cost planner over the sealed pack and routes each bucket to the
+    fused scan or the stitched graph traversal; the chosen plan is left on
+    ``manager.last_plan`` for inspection.
 
     All reported timings (``search_ms``, trace spans) stop their clocks
     only after ``jax.block_until_ready`` on the dispatch results, so they
@@ -155,6 +269,24 @@ def query_segments(manager, queries: np.ndarray, filt: Optional[Filter],
         pack = manager.shard_pack(epoch, live_segs)
         dt_ms = 0.0
         if pack is not None:
+            # cost-based routing: with read_path != "scan" the planner
+            # splits the pack's buckets into a scan subset (dispatched
+            # through the exact same calls below — byte-for-byte the
+            # forced-scan answer) and a graph subset (stitched traversal)
+            rp = (manager.cfg.read_path if read_path is None
+                  else str(read_path))
+            scan_pack = pack
+            graph_bvs: tuple = ()
+            if isinstance(pack, PackView) and rp != "scan":
+                import dataclasses as _dc
+                _, graph_caps = _plan_pack(manager, pack, filt, rp,
+                                           t_lo, t_hi, obs, registry)
+                if graph_caps:
+                    graph_bvs = tuple(bv for bv in pack.buckets
+                                      if bv.cap in graph_caps)
+                    scan_pack = _dc.replace(
+                        pack, buckets=tuple(bv for bv in pack.buckets
+                                            if bv.cap not in graph_caps))
             with trace.span("sealed_scan",
                             quantized=getattr(pack, "quantize", None)
                             is not None):
@@ -166,28 +298,38 @@ def query_segments(manager, queries: np.ndarray, filt: Optional[Filter],
                     # dispatch and reranks the union exactly at fp32
                     # (original vectors from the point store) — one exact
                     # (gid, dist) block for the merge
-                    gg, dd = pack_search(
-                        pack, queries, filt, k, t_lo=t_lo, t_hi=t_hi,
-                        metric=metric, lookup=manager.get_points,
-                        rerank_multiple=manager.cfg.rerank_multiple,
-                        trace=trace, observe=observe)
-                    blocks_g.append(gg)
-                    blocks_d.append(dd)
+                    if scan_pack.buckets:
+                        gg, dd = pack_search(
+                            scan_pack, queries, filt, k, t_lo=t_lo,
+                            t_hi=t_hi, metric=metric,
+                            lookup=manager.get_points,
+                            rerank_multiple=manager.cfg.rerank_multiple,
+                            trace=trace, observe=observe)
+                        blocks_g.append(gg)
+                        blocks_d.append(dd)
                 elif isinstance(pack, PackView):
                     # one fused dispatch per unpruned capacity bucket;
                     # every bucket block joins the same exact (gid, dist)
                     # merge as the delta block below
-                    for gg, dd in pack_search_blocks(
-                            pack, queries, filt, k, t_lo=t_lo, t_hi=t_hi,
-                            metric=metric, trace=trace, observe=observe):
-                        blocks_g.append(gg)
-                        blocks_d.append(dd)
+                    if scan_pack.buckets:
+                        for gg, dd in pack_search_blocks(
+                                scan_pack, queries, filt, k, t_lo=t_lo,
+                                t_hi=t_hi, metric=metric, trace=trace,
+                                observe=observe):
+                            blocks_g.append(gg)
+                            blocks_d.append(dd)
                 else:                     # legacy monolithic pack
                     gg, dd = pack_search(pack, queries, filt, k, t_lo=t_lo,
                                          t_hi=t_hi, metric=metric,
                                          trace=trace)
                     blocks_g.append(gg)
                     blocks_d.append(dd)
+                if graph_bvs:
+                    gb_g, gb_d = _graph_search_blocks(
+                        manager, pack, graph_bvs, queries, filt, k,
+                        t_lo, t_hi, metric, trace, registry)
+                    blocks_g.extend(gb_g)
+                    blocks_d.extend(gb_d)
                 # the per-bucket spans above already blocked on their own
                 # results; this keeps the shared dispatch time honest even
                 # if a future path returns device arrays here

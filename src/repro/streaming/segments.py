@@ -19,7 +19,31 @@ from ..core import CubeGraphConfig, CubeGraphIndex, Filter
 from ..kernels import filtered_topk
 
 __all__ = ["DeltaBuffer", "DeltaSnapshot", "PointStore", "SealedSegment",
-           "SegmentQueryStats", "scan_filtered_topk"]
+           "SegmentGraph", "SegmentQueryStats", "scan_filtered_topk"]
+
+
+# Per-segment seed budget for the stitched traversal (see _live_graph):
+# dense all-layer cube entries below this, an even-stride subsample above.
+_MAX_SEED_ENTRIES = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentGraph:
+    """Live-row adjacency + entry points of a sealed segment's CubeGraph
+    index (the union of every layer's edges), re-indexed to the live-row
+    subset that :meth:`SealedSegment.live_snapshot` returns.
+
+    ``nbrs`` is ``[n_live, deg] int32`` (-1 padded; neighbors pointing at
+    deleted rows are dropped — dead rows stay routable inside the segment's
+    own index but a packed graph block only carries live rows, whose meta
+    the traversal kernel's predicate sees).  ``entries`` is ``[e] int32``
+    live-local entry ids — the per-cube entry points of the index's layers
+    (capped at ``_MAX_SEED_ENTRIES``), i.e. the seeds the stitched
+    cross-segment traversal starts this segment's component from.
+    """
+
+    nbrs: np.ndarray
+    entries: np.ndarray
 
 
 def grow_rows(need: int, *pairs):
@@ -415,17 +439,78 @@ class SealedSegment:
             self.index.delete(local)
         return len(local)
 
-    def live_snapshot(self):
+    def live_snapshot(self, with_graph: bool = False):
         """``(x, s, gids, quant)`` of the live rows, all derived from ONE
         read of the validity mask — the input a lock-free reader (the cold
         shard-pack build) must use, so a delete racing it can never yield
         vectors and codec rows of different lengths.  ``quant`` is the
         row-subset :class:`~repro.quant.codec.SegmentQuant` payload, or
-        ``None`` when the segment carries no codec."""
+        ``None`` when the segment carries no codec.
+
+        With ``with_graph=True`` a fifth element is appended: the
+        :class:`SegmentGraph` (coarsest-layer adjacency + entry points,
+        re-indexed to the same live-row subset) that the graph read path
+        stages into the bucketed pack.  The default 4-tuple shape is pinned
+        by callers and tests — never change it."""
         keep = np.nonzero(self.index.valid)[0]
         quant = self.quant.take(keep) if self.quant is not None else None
-        return (np.asarray(self.index.x)[keep], self.index.s_np[keep],
-                self.gids[keep].copy(), quant)
+        out = (np.asarray(self.index.x)[keep], self.index.s_np[keep],
+               self.gids[keep].copy(), quant)
+        if with_graph:
+            out = out + (self._live_graph(keep),)
+        return out
+
+    def _live_graph(self, keep: np.ndarray) -> SegmentGraph:
+        # Flatten the hierarchical index into one navigable adjacency: the
+        # union, per point, of every layer's edges (intra + cross, already
+        # concatenated in all_nbrs) — coarse layers contribute the
+        # long-range links greedy routing needs to cross clusters, fine
+        # layers the local links that make the last hops exact.  Edges are
+        # re-indexed to live-local ids; edges into deleted rows are dropped
+        # (they are not packed — compaction restores their connectivity).
+        inv = np.full(self.index.n, -1, np.int32)
+        inv[keep] = np.arange(len(keep), dtype=np.int32)
+        nb = np.concatenate([np.asarray(lg.all_nbrs)[keep]
+                             for lg in self.index.layers], axis=1)
+        nb = np.where(nb >= 0, inv[np.maximum(nb, 0)], -1).astype(np.int32)
+        # per-row dedupe, valid edges first: sort descending so duplicates
+        # are adjacent and -1 padding sinks to the tail
+        nb = -np.sort(-nb, axis=1)
+        dup = np.zeros_like(nb, dtype=bool)
+        dup[:, 1:] = nb[:, 1:] == nb[:, :-1]
+        nb = np.where(dup, -1, nb)
+        nbrs = -np.sort(-nb, axis=1)
+        # Entry points: the per-cube entries of EVERY layer.  Each sealed
+        # segment is its own connected component inside a shared bucket
+        # (edges never cross segments), and the stitched beam is shared
+        # across components — sparse seeding starves all but the closest
+        # component.  Dense per-cube seeds start every component's search
+        # next to the query, which is what keeps stitched recall high as
+        # buckets accumulate segments (one extra scored candidate per
+        # nonempty cube — the planner's seed_cost term prices this).
+        ents = []
+        for lg in self.index.layers:
+            e = np.asarray(lg.cubes.entry).reshape(-1)
+            e = e[e >= 0]
+            if len(e):
+                ents.append(inv[e])
+        entries = (np.unique(np.concatenate(ents)) if ents
+                   else np.empty(0, np.int32))
+        entries = entries[entries >= 0].astype(np.int32)
+        if len(entries) > _MAX_SEED_ENTRIES:
+            # Big (compacted) segments would otherwise contribute O(n)
+            # seeds — the traversal's seed-init cost must stay bounded for
+            # its latency to scale sub-linearly.  An even-stride subsample
+            # keeps seeds spread across the segment; large segments mean
+            # few components per bucket, so within-component navigation
+            # (not seed density) carries recall there.
+            idx = np.linspace(0, len(entries) - 1, _MAX_SEED_ENTRIES)
+            entries = entries[idx.astype(np.int64)]
+        if len(entries) == 0 and len(keep):
+            # all designated entries were deleted: fall back to the first
+            # few live rows so the segment stays reachable until compaction
+            entries = np.arange(min(len(keep), 4), dtype=np.int32)
+        return SegmentGraph(nbrs=nbrs, entries=entries)
 
     def compacted(self, quantize: Optional[str] = None) -> "SealedSegment":
         """GC lazy deletions: rebuild over live points (same seg id/gids).
@@ -462,6 +547,7 @@ class SealedSegment:
             g = self.index.grid
             filt = BoxFilter(lo=np.asarray(g.lo, np.float32),
                              hi=np.asarray(g.hi, np.float32))
+        kw.setdefault("tie_gids", self.gids)   # stable (dist, gid) ordering
         ids, dd = self.index.query(np.atleast_2d(queries), filt, k=k, ef=ef,
                                    **kw)
         ids = np.asarray(ids)

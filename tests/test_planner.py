@@ -1,0 +1,317 @@
+"""Cost-based sealed-segment read path: planner decision logic, the
+BucketStats schema contract, the scan-parity / graph-recall property
+harness over lifecycle interleavings, beam-search tie-break determinism,
+graph persistence pinning, and the bench-registry smoke test."""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (BoxFilter, ComposeFilter, CubeGraphConfig,
+                        IntervalFilter)
+from repro.core.cubegraph import CubeGraphIndex
+from repro.core.workloads import ground_truth, make_box_filter, recall
+from repro.streaming import SegmentManager, StreamConfig
+from repro.streaming.planner import (REQUIRED_STATS_KEYS, PlanDecision,
+                                     PlannerCosts, decide_bucket,
+                                     plan_read_paths)
+
+IDX_CFG = CubeGraphConfig(n_layers=3, m_intra=10, m_cross=3)
+
+# Cost overlays that pin the auto planner to one side: parity legs use
+# SCAN_BIASED (graph priced absurdly high -> every decision is scan, and
+# the dispatch must be byte-for-byte the forced-scan one); recall legs use
+# GRAPH_BIASED (graph free + every guard disabled -> every usable bucket
+# traverses).
+SCAN_BIASED = PlannerCosts(hop_cost=1e12)
+GRAPH_BIASED = PlannerCosts(hop_cost=0.0, seed_cost=0.0, base_hops=0.0,
+                            hops_per_log2=0.0, min_graph_rows=0,
+                            min_selectivity=0.0)
+
+
+def _graph_cfg(n_shards, quantize=None, read_path="auto"):
+    return StreamConfig(time_dim=2, seal_max_points=120, n_shards=n_shards,
+                        compact_max_segments=3, ttl=1.5, index_cfg=IDX_CFG,
+                        read_path=read_path, quantize=quantize,
+                        graph_ef=128)
+
+
+def _apply_stream_ops(mgr, rng, ops, d=24):
+    """Drive one manager through an interleaving of lifecycle ops (same op
+    coding as tests/test_sharded.py: ingest/delete/seal/compact/expire)."""
+    t = getattr(mgr, "_test_t", 0.0)
+    for op in ops:
+        if op == 0 or mgr.n_total == 0:           # ingest
+            nb = int(rng.integers(40, 150))
+            x = rng.normal(size=(nb, d)).astype(np.float32)
+            s = rng.uniform(size=(nb, 3))
+            s[:, 2] = t + np.linspace(0.0, 0.05, nb)
+            t += 0.25
+            mgr.ingest(x, s)
+        elif op == 1:                             # delete
+            g = rng.integers(0, mgr.n_total, size=25)
+            mgr.delete(g)
+        elif op == 2:                             # seal
+            mgr.seal()
+        elif op == 3:                             # compact (merges + GC)
+            mgr.compact()
+        elif op == 4:                             # expire (finite ttl)
+            mgr.expire()
+    mgr._test_t = t
+
+
+# ---------------------------------------------------------------------------
+# Planner decision logic + the BucketStats schema contract (unit level)
+# ---------------------------------------------------------------------------
+
+def _contract_stats(**over):
+    row = {k: 1 for k in REQUIRED_STATS_KEYS}
+    row["pruning_rate"] = 0.0
+    row["selectivity"] = 0.5
+    row.update(over)
+    return row
+
+
+def test_bucket_stats_snapshot_satisfies_planner_contract():
+    """The metrics-side snapshot must expose every key the planner
+    consumes — a rename in obs/metrics.py fails here loudly instead of
+    silently degrading plans."""
+    from repro.obs.metrics import BucketStats
+    bs = BucketStats()
+    bs.observe(1024, rows=4, active_rows=2, candidates=5,
+               candidate_slots=10, cache_hit=True)
+    snap = bs.snapshot()
+    assert set(snap) == {"1024"}                 # keys are str(cap)
+    missing = set(REQUIRED_STATS_KEYS) - set(snap["1024"])
+    assert not missing, f"BucketStats snapshot lost planner keys: {missing}"
+    # the raw-counter half of the contract is BucketStats._COUNTS
+    assert set(BucketStats._COUNTS) <= set(REQUIRED_STATS_KEYS)
+    # and the planner runs on a row carrying EXACTLY the contract keys, so
+    # a planner-side key addition that obs does not serve also fails loudly
+    row = {k: snap["1024"][k] for k in REQUIRED_STATS_KEYS}
+    dec = decide_bucket(1024, 2, 8, True, row, PlannerCosts(), "auto")
+    assert isinstance(dec, PlanDecision) and dec.mode in ("scan", "graph")
+
+
+def test_decide_bucket_guards_and_forcing():
+    """Mode gates: graph needs a staged block + live seeds; forcing wins
+    over cost; tiny buckets and starving filters stay on scan."""
+    c = PlannerCosts()
+    assert decide_bucket(1024, 8, 0, True, None, c, "graph").mode == "scan"
+    assert decide_bucket(1024, 8, 9, False, None, c, "graph").mode == "scan"
+    assert decide_bucket(1024, 8, 9, True, None, c, "graph").mode == "graph"
+    assert decide_bucket(1024, 8, 9, True, None, c, "scan").mode == "scan"
+    small = decide_bucket(256, 1, 9, True, None, c, "auto")
+    assert (small.mode, small.reason) == ("scan", "small_bucket")
+    starved = decide_bucket(4096, 64, 9, True,
+                            _contract_stats(selectivity=0.001), c, "auto")
+    assert (starved.mode, starved.reason) == ("scan", "selective_filter")
+    # large bucket, benign filter: the estimates decide
+    big = decide_bucket(4096, 64, 9, True, _contract_stats(), c, "auto")
+    assert big.reason == "cheaper"
+    assert (big.mode == "graph") == (big.est_graph < big.est_scan)
+
+
+def test_plan_read_paths_respects_graph_allowed():
+    """A non-encodable filter forces scan across the pack (the traversal
+    kernel shares the scan kernel's predicate encoding)."""
+    rng = np.random.default_rng(7)
+    mgr = SegmentManager(24, 3, _graph_cfg(1))
+    _apply_stream_ops(mgr, rng, [0, 2])
+    epoch, segments, _ = mgr.snapshot()
+    view = mgr.shard_pack(epoch, [g for g in segments if g.n_live > 0])
+    plan = plan_read_paths(view, "graph", {}, PlannerCosts(),
+                           -np.inf, np.inf, graph_allowed=False)
+    assert plan and all(p.mode == "scan" for p in plan.values())
+    assert all(p.reason == "filter_not_encodable" for p in plan.values())
+    plan = plan_read_paths(view, "graph", {}, PlannerCosts(),
+                           -np.inf, np.inf, graph_allowed=True)
+    assert plan and all(p.mode == "graph" for p in plan.values())
+
+
+# ---------------------------------------------------------------------------
+# Property harness: auto==scan parity + graph recall over op interleavings
+# ---------------------------------------------------------------------------
+
+def _check_parity_and_recall(seed, n_shards, ops, quantize):
+    """After an arbitrary lifecycle interleaving: (1) whenever the planner
+    chooses scan for every bucket, ``read_path="auto"`` answers bit-for-bit
+    identically to forced ``"scan"``; (2) whenever it chooses graph, the
+    merged answer keeps recall@10 >= 0.95 against exact brute force over
+    the live points."""
+    rng = np.random.default_rng(seed)
+    cfg = _graph_cfg(n_shards, quantize)
+    mgr = SegmentManager(24, 3, cfg)
+    _apply_stream_ops(mgr, rng, ops)
+    mgr.seal()
+    q = rng.normal(size=(4, 24)).astype(np.float32)
+    gids = np.arange(mgr.n_total)
+    x_all, s_all, present = mgr.get_points(gids)
+    valid = mgr.alive & present
+    filters = [None, make_box_filter(3, 0.6, seed=seed),
+               IntervalFilter(dim=2, lo=np.float32(0.2))]
+    for filt in filters:
+        # (1) parity leg: scan-biased costs -> planner must pick scan
+        # everywhere -> identical bytes to the forced scan path
+        mgr.cfg = dataclasses.replace(cfg, planner_costs=SCAN_BIASED)
+        ga, da = mgr.query(q, filt, k=10)
+        if mgr.last_plan:
+            assert all(p.mode == "scan" for p in mgr.last_plan.values())
+        gs, ds = mgr.query(q, filt, k=10, read_path="scan")
+        assert np.array_equal(ga, gs)
+        assert np.array_equal(da, ds)
+        # (2) recall leg: graph-biased costs -> every usable bucket
+        # traverses; answers stay above the paper's recall floor
+        mgr.cfg = dataclasses.replace(cfg, planner_costs=GRAPH_BIASED)
+        gg, _ = mgr.query(q, filt, k=10)
+        if valid.any():
+            gt, _ = ground_truth(x_all, s_all, q, filt, 10, valid=valid)
+            assert recall(gg, gt) >= 0.95, (filt, recall(gg, gt))
+    mgr.cfg = cfg
+
+
+@pytest.mark.parametrize("seed,n_shards,ops,quantize", [
+    (11, 1, [0, 1, 2, 0, 3, 1, 4], None),     # all op kinds, fp32
+    (22, 3, [0, 2, 1, 3, 0, 0, 4, 2], None),  # sharded, expiry + merges
+    (33, 1, [0, 1, 2, 0, 3, 1, 4], "int8"),   # quantized candidates+rerank
+    (44, 3, [0, 2, 0, 2, 1, 3], "int8"),      # quantized, multi-segment
+])
+def test_planner_parity_and_recall(seed, n_shards, ops, quantize):
+    """Deterministic interleavings of the parity/recall property (always
+    run; the hypothesis variant widens the search space when available)."""
+    _check_parity_and_recall(seed, n_shards, ops, quantize)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 10_000), n_shards=st.sampled_from([1, 3]),
+           ops=st.lists(st.integers(0, 4), min_size=3, max_size=8),
+           quantize=st.sampled_from([None, "int8"]))
+    def test_planner_parity_and_recall_hypothesis(seed, n_shards, ops,
+                                                  quantize):
+        """Hypothesis-driven interleavings of the same property."""
+        _check_parity_and_recall(seed, n_shards, ops, quantize)
+except ImportError:                               # pragma: no cover
+    pass
+
+
+# ---------------------------------------------------------------------------
+# Beam-search (dist, gid) tie-break determinism (core regression)
+# ---------------------------------------------------------------------------
+
+def test_core_beam_search_tie_key_invariant_to_build_order():
+    """Duplicated vectors produce exact distance ties; with ``tie_gids``
+    the core beam search must emit the same (gid, dist) rows regardless of
+    the row order the index was built from and of the routing mode —
+    the per-segment analogue of test_quant.py's reranked-tie invariant."""
+    rng = np.random.default_rng(33)
+    base = rng.normal(size=(50, 16)).astype(np.float32)
+    x = np.concatenate([base, base[:5]])          # 5 exact duplicate pairs
+    s = rng.uniform(size=(55, 3))
+    s[50:] = s[:5]                                # duplicates share metadata
+    gids = np.arange(55, dtype=np.int64)
+    perm = rng.permutation(55)
+    cfg = CubeGraphConfig(n_layers=2, m_intra=8, m_cross=3)
+    idx_a = CubeGraphIndex.build(x, s, cfg)
+    idx_b = CubeGraphIndex.build(x[perm], s[perm], cfg)
+    q = base[:3] + np.float32(1e-4)
+    filt = BoxFilter(lo=np.full(3, -1.0, np.float32),
+                     hi=np.full(3, 2.0, np.float32))
+    outs = []
+    for mode in ("predetermined", "onthefly"):
+        ia, da = idx_a.query(q, filt, k=12, ef=64, mode=mode, tie_gids=gids)
+        ib, db = idx_b.query(q, filt, k=12, ef=64, mode=mode,
+                             tie_gids=perm.astype(np.int64))
+        ga = np.where(ia >= 0, gids[np.maximum(ia, 0)], -1)
+        gb = np.where(ib >= 0, perm[np.maximum(ib, 0)], -1)
+        outs.append((ga, da))
+        outs.append((gb, db))
+    g0, d0 = outs[0]
+    for g, d in outs[1:]:
+        assert np.array_equal(g0, g)
+        assert np.allclose(d0, d, atol=1e-5)
+    # every duplicate pair that made the list is ordered by ascending gid
+    for row in g0:
+        pos = {int(g): i for i, g in enumerate(row) if g >= 0}
+        for lo in range(5):
+            if lo in pos and lo + 50 in pos:
+                assert pos[lo] < pos[lo + 50]
+
+
+def test_manager_unsharded_tiebreak_is_dist_gid():
+    """The per-segment (unsharded) read path orders exact duplicates
+    across segments by ascending gid — stable under repetition and equal
+    to the sharded scan's ordering contract."""
+    rng = np.random.default_rng(5)
+    base = rng.normal(size=(60, 24)).astype(np.float32)
+    dup = base[:3]
+    cfg = StreamConfig(time_dim=2, seal_max_points=10 ** 9, n_shards=0,
+                       index_cfg=IDX_CFG)
+    mgr = SegmentManager(24, 3, cfg)
+    meta = rng.uniform(size=(3, 3))
+    for blk in range(3):
+        x = np.concatenate([dup, base[15 * (blk + 1): 15 * (blk + 2)]])
+        s = np.concatenate([meta, rng.uniform(size=(15, 3))])
+        mgr.ingest(x, s)
+        mgr.seal()
+    # gids 0..17 / 18..35 / 36..53; the query vector appears at 0, 18, 36
+    q = dup[:1]
+    g1, d1 = mgr.query(q, None, k=9, use_shards=False)
+    g2, d2 = mgr.query(q, None, k=9, use_shards=False)
+    assert np.array_equal(g1, g2) and np.array_equal(d1, d2)
+    assert g1[0, :3].tolist() == [0, 18, 36]      # zero-dist ties by gid
+    assert np.allclose(d1[0, :3], d1[0, 0])
+
+
+# ---------------------------------------------------------------------------
+# Persistence: restore never rebuilds graphs
+# ---------------------------------------------------------------------------
+
+def test_graph_restore_never_rebuilds(tmp_path, monkeypatch):
+    """A restored replica serves the graph read path from the persisted
+    index arrays: CubeGraphIndex.build must never run, and traversal
+    answers match the writer bit-for-bit."""
+    rng = np.random.default_rng(17)
+    cfg = _graph_cfg(1, read_path="graph")
+    mgr = SegmentManager(24, 3, cfg)
+    _apply_stream_ops(mgr, rng, [0, 2, 0, 2, 1])
+    mgr.seal()
+    q = rng.normal(size=(4, 24)).astype(np.float32)
+    ids0, dd0 = mgr.query(q, None, k=10)
+    assert mgr.last_plan and any(p.mode == "graph"
+                                 for p in mgr.last_plan.values())
+    snap = os.path.join(str(tmp_path), "snap")
+    mgr.snapshot_to(snap)
+
+    def _boom(*a, **k):
+        raise AssertionError("restore rebuilt a segment graph")
+    monkeypatch.setattr(CubeGraphIndex, "build", _boom)
+    m2 = SegmentManager.restore(snap, cfg=cfg, resume=False)
+    ids1, dd1 = m2.query(q, None, k=10)
+    assert np.array_equal(ids0, ids1) and np.array_equal(dd0, dd1)
+    assert m2.last_plan and any(p.mode == "graph"
+                                for p in m2.last_plan.values())
+
+
+# ---------------------------------------------------------------------------
+# Bench registry: every section imports and exposes its entry point
+# ---------------------------------------------------------------------------
+
+def test_bench_registry_imports_loudly():
+    """Every registered benchmark module must import cleanly and expose
+    its entry point — guarding the failure mode where one bad import
+    silently dropped every section from the suite."""
+    from benchmarks.run import SECTIONS, load_sections
+    loaded, errors = load_sections()
+    assert not errors, \
+        "; ".join(f"{n}: {type(e).__name__}: {e}" for n, e in errors)
+    assert [n for n, _ in loaded] == [n for n, _, _ in SECTIONS]
+    assert all(callable(fn) for _, fn in loaded)
+    # exp15 (this PR's experiment) must be registered and summarized
+    assert any(n == "exp15_read_path_planner" for n, _, _ in SECTIONS)
+    from benchmarks.common import STREAMING_SECTIONS
+    assert any("exp15_read_path_planner".startswith(p)
+               for p in STREAMING_SECTIONS)

@@ -304,3 +304,35 @@ def test_streaming_document_store_and_batcher():
                                      k=3))
     assert 99 in batcher2.flush()
     store.manager.wait_for_compaction()
+
+
+def test_graph_read_path_smoke():
+    """Tier-1 smoke for the stitched graph traversal: a small multi-segment
+    sealed corpus answers with high recall under ``read_path="graph"``, and
+    ``"auto"`` with scan-biased costs stays bit-for-bit equal to ``"scan"``
+    (the cost planner must never change scan answers)."""
+    import dataclasses
+    from repro.streaming.planner import PlannerCosts
+    x, s = _timed_dataset(1200)
+    q = _queries(x, b=4)
+    f = _window(0.1, 0.9)
+    cfg = StreamConfig(time_dim=2, seal_max_points=300, n_shards=1,
+                       read_path="auto", graph_ef=192, index_cfg=IDX_CFG)
+    mgr = SegmentManager(24, 3, cfg)
+    mgr.ingest(x, s)
+    mgr.seal()
+    gt, _ = ground_truth(x, s, q, f, 10)
+    gids_g, _ = mgr.query(q, f, k=10, read_path="graph")
+    assert recall(gids_g, gt) >= 0.95
+    assert mgr.last_plan and all(p.mode == "graph"
+                                 for p in mgr.last_plan.values())
+    mgr.cfg = dataclasses.replace(cfg, planner_costs=PlannerCosts(
+        hop_cost=1e12))
+    ga, da = mgr.query(q, f, k=10)
+    assert all(p.mode == "scan" for p in mgr.last_plan.values())
+    gs, ds = mgr.query(q, f, k=10, read_path="scan")
+    assert np.array_equal(ga, gs) and np.array_equal(da, ds)
+    # planner decisions are observable
+    counters = mgr.stats()["obs"]["metrics"]["counters"]
+    assert counters.get('planner_decision_total{mode="graph"}', 0) >= 1
+    assert counters.get('planner_decision_total{mode="scan"}', 0) >= 1
