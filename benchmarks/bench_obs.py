@@ -31,15 +31,19 @@ CFG = CubeGraphConfig(n_layers=3, m_intra=12, m_cross=4)
 REPS = 15
 
 
-def _median_latency_us(fn, reps=REPS):
-    """Median wall time of ``fn()`` in µs over ``reps`` calls (after the
+def _latency_samples_us(fn, reps=REPS):
+    """Per-rep wall times of ``fn()`` in µs over ``reps`` calls (after the
     caller has warmed compilation)."""
     lats = []
     for _ in range(reps):
         t0 = time.perf_counter()
         fn()
         lats.append((time.perf_counter() - t0) * 1e6)
-    lats.sort()
+    return lats
+
+
+def _median(lats):
+    lats = sorted(lats)
     return lats[len(lats) // 2]
 
 
@@ -74,9 +78,10 @@ def run():
     mgr.query(q, filt, k=10)                      # build pack + compile
     mgr.query(q, None, k=10)                      # compile unfiltered too
 
-    untraced_us = _median_latency_us(lambda: mgr.query(q, filt, k=10))
-    traced_us = _median_latency_us(
-        lambda: mgr.query(q, filt, k=10, return_trace=True))
+    untraced_lats = _latency_samples_us(lambda: mgr.query(q, filt, k=10))
+    untraced_us = _median(untraced_lats)
+    traced_us = _median(_latency_samples_us(
+        lambda: mgr.query(q, filt, k=10, return_trace=True)))
     overhead_pct = (traced_us - untraced_us) / untraced_us * 100.0
 
     obs = mgr.stats()["obs"]
@@ -97,6 +102,10 @@ def run():
         "jumbo_points": jumbo, "small_points": small,
         "n_small_segments": n_small, "reps": REPS,
         "us_per_query": round(untraced_us / BENCH_Q, 1),
+        # every untraced rep, so the digest's median_query_us is a real
+        # median over REPS samples rather than a single value
+        "latency_samples": [{"us_per_query": round(us / BENCH_Q, 1)}
+                            for us in untraced_lats],
         "traced_us_per_query": round(traced_us / BENCH_Q, 1),
         "tracer_overhead_pct": round(overhead_pct, 2),
         "pruning_rate": pruning_rate,

@@ -25,7 +25,8 @@ from repro.core import (BoxFilter, ComposeFilter, CubeGraphConfig,
 from repro.core.workloads import ground_truth, make_dataset, recall
 from repro.streaming import SegmentManager, StreamConfig
 
-from .common import BENCH_D, BENCH_N, BENCH_Q, csv_row, record, timed_queries
+from .common import (BENCH_D, BENCH_N, BENCH_Q, csv_row, record,
+                     timed_queries, timed_query_samples)
 
 CFG = CubeGraphConfig(n_layers=3, m_intra=12, m_cross=4)
 
@@ -58,7 +59,9 @@ def run():
             quantize=quantize, rerank_multiple=4, index_cfg=CFG))
         mgr.ingest(x, s)
         managers[mode] = mgr
-        dt_f, ids_f = timed_queries(lambda: mgr.query(q, f, k=10)[0], reps=5)
+        dts, ids_f = timed_query_samples(lambda: mgr.query(q, f, k=10)[0],
+                                         reps=5)
+        dt_f = sum(dts) / len(dts)
         dt_n, ids_n = timed_queries(
             lambda: mgr.query(q, None, k=10)[0], reps=5)
         st = mgr.stats()
@@ -69,6 +72,10 @@ def run():
                                             recall(ids_n, gt_n)), 4),
             tag + "pack_nbytes": st["pack_nbytes"],
         }
+        if not tag:     # per-rep rows -> the digest's median is real
+            row["latency_samples"] = [
+                {"us_per_query": round(dt / BENCH_Q * 1e6, 1)}
+                for dt in dts]
         out["modes"][mode] = row
         csv_row(f"exp13/{mode}", dt_f * 1e6,
                 f"recall={row[tag + 'recall_at_10']};"

@@ -32,6 +32,24 @@ def timed_queries(fn: Callable[[], np.ndarray], reps: int = 3):
     return dt, out
 
 
+def timed_query_samples(fn: Callable[[], np.ndarray], reps: int = 5):
+    """(per-rep seconds list, result of last call) with one warmup.
+
+    Use where a benchmark feeds the BENCH_streaming.json digest: the
+    digest medians every ``us_per_query`` leaf it finds, so recording one
+    ``{"us_per_query": ...}`` row per rep (e.g. under a
+    ``latency_samples`` key) makes ``median_query_us`` a real median
+    instead of a single-sample artifact (``streaming_summary`` flags
+    sections whose sample count is < 3)."""
+    fn()                                   # warmup (jit compile)
+    samples, out = [], None
+    for _ in range(max(int(reps), 1)):
+        t0 = time.perf_counter()
+        out = fn()
+        samples.append(time.perf_counter() - t0)
+    return samples, out
+
+
 def qps(batch: int, seconds: float) -> float:
     return batch / max(seconds, 1e-9)
 
@@ -76,7 +94,7 @@ def csv_row(name: str, us_per_call: float, derived: str):
 
 # -- machine-readable perf trajectory (BENCH_streaming.json) -----------------
 STREAMING_SECTIONS = ("exp9_", "exp10_", "exp11_", "exp12_", "exp13_",
-                      "exp14_", "exp15_")
+                      "exp14_", "exp15_", "exp16_")
 _SUMMARY_LATENCY_KEYS = {   # payload key -> (scale to µs, canonical name)
     "us_per_query": (1.0, "query_us"),
     "first_query_ms_after_seal": (1e3, "first_query_after_seal_us"),
@@ -146,6 +164,15 @@ def streaming_summary(results: Dict[str, object]) -> Dict[str, dict]:
         for key in _SUMMARY_RATIO_KEYS:
             if key in ratios:
                 row[key] = max(ratios[key])
+        # a median of < 3 samples is an artifact of sample composition,
+        # not a statistic — name the under-sampled metrics so the digest
+        # is honest about which medians to trust (satellite of exp16:
+        # exp13/exp14 used to report single-sample "medians")
+        low = sorted(name[2:-8] for name, v in row.items()
+                     if name.startswith("n_") and name.endswith("_samples")
+                     and isinstance(v, int) and v < 3)
+        if low:
+            row["low_sample_keys"] = low
         if row:
             out[section] = row
     return out

@@ -319,41 +319,75 @@ class _SegEntry:
 
 @dataclasses.dataclass
 class _Bucket:
-    """One capacity class: a padded ``[rows, cap, ·]`` device block whose
-    rows are allocated in slots of ``n_shards`` consecutive rows.
+    """One capacity class: a padded ``[rows, cap, ·]`` block whose rows are
+    allocated in slots of ``n_shards`` consecutive rows.
 
     Exactly one of the two layouts is populated: the fp32 blocks
     (``x`` / ``s``) or the quantized transposed blocks (``codes`` / ``st``
     / ``scales``) — never both, which is where the quantized pack's device
     bytes go from ~1 KiB/point to ~70 B/point.
+
+    Residency (tiered storage): a **resident** bucket holds its blocks as
+    device ``jnp`` arrays; an evicted one holds byte-identical host ``np``
+    copies in ``host`` instead (and ``gids_h`` doubles as its gid block).
+    Cold mutations are copy-on-write — the touched host array is replaced,
+    never edited in place — so a :class:`BucketView` captured before the
+    mutation keeps reading the pre-mutation bytes, exactly like the
+    functional device updates.  ``gen`` counts mutations/transitions so an
+    off-lock admission upload can detect it went stale before installing.
     """
 
     cap: int
-    gids: jnp.ndarray            # [rows, cap] int32 (-1 padding)
     seg_ids: np.ndarray          # [rows] int64 owning segment (-1 = free)
     t_min: np.ndarray            # [rows] owning segment's span (+inf free)
     t_max: np.ndarray            # [rows] (-inf free)
     free_slots: List[int]
+    gids_h: np.ndarray           # [rows, cap] int32 host mirror (-1 padding)
+    gids: Optional[jnp.ndarray] = None    # [rows, cap] int32 (resident only)
     x: Optional[jnp.ndarray] = None       # [rows, cap, dpad] fp32
     s: Optional[jnp.ndarray] = None       # [rows, cap, MPAD] fp32
     codes: Optional[jnp.ndarray] = None   # [rows, dq, cap] int8
     st: Optional[jnp.ndarray] = None      # [rows, mq, cap] fp32 (+xsq row)
     scales: Optional[jnp.ndarray] = None  # [rows, dq] fp32 per-dim scales
     nbrs: Optional[jnp.ndarray] = None    # [rows, cap, degp] int32 adjacency
+    resident: bool = True
+    host: Optional[Dict[str, np.ndarray]] = None  # cold block arrays
+    gen: int = 0                 # bumps on every mutation / tier transition
 
     @property
     def n_rows(self) -> int:
         """Allocated rows (live + free) in this bucket's block."""
-        return int(self.gids.shape[0])
+        return int(self.gids_h.shape[0])
+
+    def _arrs(self) -> Dict[str, object]:
+        """The populated block arrays (device when resident, host when
+        cold), keyed by field name; the gid block rides under ``gids``."""
+        if not self.resident:
+            return dict(self.host, gids=self.gids_h)
+        names = ("codes", "st", "scales") if self.codes is not None \
+            else ("x", "s")
+        out = {name: getattr(self, name) for name in names}
+        if self.nbrs is not None:
+            out["nbrs"] = self.nbrs
+        out["gids"] = self.gids
+        return out
+
+    @property
+    def full_nbytes(self) -> int:
+        """Bytes this bucket's blocks occupy (on whichever tier they
+        live) — also the upload size of admitting it."""
+        return sum(int(a.size) * a.dtype.itemsize
+                   for a in self._arrs().values())
 
     @property
     def nbytes(self) -> int:
-        """Device bytes held by this bucket's block."""
-        graph = 0 if self.nbrs is None else int(self.nbrs.size) * 4
-        if self.codes is not None:
-            return int(self.codes.size + (self.st.size + self.scales.size
-                                          + self.gids.size) * 4) + graph
-        return int((self.x.size + self.s.size + self.gids.size) * 4) + graph
+        """Device bytes held by this bucket (0 when evicted)."""
+        return self.full_nbytes if self.resident else 0
+
+    @property
+    def host_nbytes(self) -> int:
+        """Host bytes held by this bucket's cold copy (0 when resident)."""
+        return 0 if self.resident else self.full_nbytes
 
 
 @dataclasses.dataclass(frozen=True)
@@ -363,7 +397,16 @@ class BucketView:
     The ``jnp`` arrays are captured by reference (functional updates never
     mutate them); the host-side row metadata is copied because delta
     application edits it in place.  Quantized buckets expose
-    ``codes`` / ``st`` / ``scales`` instead of ``x`` / ``s``."""
+    ``codes`` / ``st`` / ``scales`` instead of ``x`` / ``s``.
+
+    A **cold** bucket (``resident=False`` — its block was evicted under the
+    device budget, see ``streaming/tiering.py``) exposes the same fields as
+    host ``np`` arrays holding byte-identical content; dispatching them
+    through the same kernels streams the block to the device transiently,
+    so cold answers are bit-for-bit the resident ones.  ``stage_bytes`` is
+    what admitting the block would upload (the planner's staging cost) and
+    ``fill`` counts filled slots per row (the planner's live-point
+    estimate)."""
 
     cap: int
     gids: jnp.ndarray
@@ -380,6 +423,9 @@ class BucketView:
     # ((row0, flattened positions), ...) — row0 identifies the owning slot's
     # first bucket row, so the temporal active mask decides seed inclusion
     entries: Tuple[Tuple[int, np.ndarray], ...] = ()
+    resident: bool = True
+    stage_bytes: int = 0                  # device bytes if admitted
+    fill: Optional[np.ndarray] = None     # [rows] filled slots per row
 
     @property
     def quantized(self) -> bool:
@@ -410,8 +456,9 @@ class PackView:
     n_shards: int
     m: int
     buckets: Tuple[BucketView, ...]
-    nbytes: int
+    nbytes: int                           # device-resident bytes
     quantize: Optional[str] = None
+    host_nbytes: int = 0                  # cold (evicted) bucket bytes
 
     @property
     def n_rows(self) -> int:
@@ -436,9 +483,14 @@ class BucketedShardPack:
     def __init__(self, n_shards: int, d: int, m: int, epoch: int = 0,
                  mesh: Optional[Mesh] = None, cap_multiple: int = 256,
                  quantize: Optional[str] = None, metrics=None,
-                 graph_degree: Optional[int] = None):
+                 graph_degree: Optional[int] = None,
+                 resident_default: bool = True):
         from ..obs.metrics import NULL_REGISTRY
         self.metrics = NULL_REGISTRY if metrics is None else metrics
+        # tiered storage: buckets created while False start cold (host
+        # arrays, no device upload) — how a budgeted cold build / restore
+        # avoids staging the whole corpus before the first query
+        self.resident_default = bool(resident_default)
         self.n_shards = max(int(n_shards), 1)
         self.d = int(d)
         self.m = int(m)
@@ -476,17 +528,24 @@ class BucketedShardPack:
 
     @property
     def nbytes(self) -> int:
-        """Device bytes held by all bucket blocks."""
+        """Device bytes held by all resident bucket blocks."""
         return sum(b.nbytes for b in self.buckets.values())
 
+    @property
+    def host_nbytes(self) -> int:
+        """Host bytes held by all evicted (cold) bucket blocks."""
+        return sum(b.host_nbytes for b in self.buckets.values())
+
     def bucket_stats(self) -> Dict[int, Dict[str, int]]:
-        """Per-bucket occupancy: ``{cap: {rows, live_rows, segments}}``."""
+        """Per-bucket occupancy:
+        ``{cap: {rows, live_rows, segments, resident}}``."""
         out = {}
         for cap, b in sorted(self.buckets.items()):
             out[cap] = {"rows": b.n_rows,
                         "live_rows": int((b.seg_ids >= 0).sum()),
                         "segments": int(len({int(s) for s in b.seg_ids
-                                             if s >= 0}))}
+                                             if s >= 0})),
+                        "resident": int(b.resident)}
         return out
 
     # -- placement -----------------------------------------------------
@@ -520,6 +579,22 @@ class BucketedShardPack:
         if self.graph_degree:
             out["nbrs"] = self._place(jnp.full((rows, cap, self.degp), -1,
                                                jnp.int32))
+        return out
+
+    def _new_block_host(self, rows: int, cap: int) -> Dict[str, np.ndarray]:
+        """Host (``np``) twin of :meth:`_new_block` for cold buckets —
+        byte-identical zero/PAD content, no device upload, and no ``gids``
+        entry (the always-maintained ``gids_h`` mirror plays that role)."""
+        if self.quantize:
+            out = dict(codes=np.zeros((rows, self.dq, cap), np.int8),
+                       st=np.full((rows, self.mq, cap), PAD_META,
+                                  np.float32),
+                       scales=np.zeros((rows, self.dq), np.float32))
+        else:
+            out = dict(x=np.zeros((rows, cap, self.dpad), np.float32),
+                       s=np.full((rows, cap, _MPAD), PAD_META, np.float32))
+        if self.graph_degree:
+            out["nbrs"] = np.full((rows, cap, self.degp), -1, np.int32)
         return out
 
     def _note_shape(self, rows: int, cap: int) -> None:
@@ -559,14 +634,18 @@ class BucketedShardPack:
         if b is None:
             slots = self._init_slots()
             rows = slots * self.n_shards
-            b = _Bucket(cap,
-                        seg_ids=np.full(rows, -1, np.int64),
-                        t_min=np.full(rows, np.inf, np.float64),
-                        t_max=np.full(rows, -np.inf, np.float64),
-                        free_slots=list(range(slots)),
-                        **self._new_block(rows, cap))
+            kw = dict(seg_ids=np.full(rows, -1, np.int64),
+                      t_min=np.full(rows, np.inf, np.float64),
+                      t_max=np.full(rows, -np.inf, np.float64),
+                      free_slots=list(range(slots)),
+                      gids_h=np.full((rows, cap), -1, np.int32))
+            if self.resident_default:
+                b = _Bucket(cap, **kw, **self._new_block(rows, cap))
+                self._note_shape(rows, cap)
+            else:
+                b = _Bucket(cap, **kw, resident=False,
+                            host=self._new_block_host(rows, cap))
             self.buckets[cap] = b
-            self._note_shape(rows, cap)
         return b
 
     def _alloc_slot(self, b: _Bucket) -> int:
@@ -575,11 +654,20 @@ class BucketedShardPack:
         if not b.free_slots:
             old_slots = b.n_rows // self.n_shards
             add_slots = max(old_slots, 1)
-            add = self._new_block(add_slots * self.n_shards, b.cap)
-            for name, arr in add.items():
-                grown = jnp.concatenate([getattr(b, name), arr])
-                setattr(b, name, self._place(grown))
             add_rows = add_slots * self.n_shards
+            if b.resident:
+                add = self._new_block(add_rows, b.cap)
+                for name, arr in add.items():
+                    grown = jnp.concatenate([getattr(b, name), arr])
+                    setattr(b, name, self._place(grown))
+            else:
+                add = self._new_block_host(add_rows, b.cap)
+                host = dict(b.host)
+                for name, arr in add.items():
+                    host[name] = np.concatenate([host[name], arr])
+                b.host = host
+            b.gids_h = np.concatenate(
+                [b.gids_h, np.full((add_rows, b.cap), -1, np.int32)])
             b.seg_ids = np.concatenate(
                 [b.seg_ids, np.full(add_rows, -1, np.int64)])
             b.t_min = np.concatenate(
@@ -587,7 +675,9 @@ class BucketedShardPack:
             b.t_max = np.concatenate(
                 [b.t_max, np.full(add_rows, -np.inf, np.float64)])
             b.free_slots.extend(range(old_slots, old_slots + add_slots))
-            self._note_shape(b.n_rows, b.cap)
+            b.gen += 1
+            if b.resident:
+                self._note_shape(b.n_rows, b.cap)
         b.free_slots.sort()
         return b.free_slots.pop(0)
 
@@ -688,15 +778,33 @@ class BucketedShardPack:
             idx = np.arange(sh, n, self.n_shards)
             gb[sh, : len(idx)] = src.gids[idx]
         staged["gids"] = gb
-        # delta upload volume: what this seal/publish actually shipped to
-        # the device (the occupancy gauges are the owner's job — it knows
-        # when a transition is complete)
-        self.metrics.counter("pack_delta_bytes_total").inc(
-            sum(arr.nbytes for arr in staged.values()))
-        r0 = jnp.int32(row0)
-        for name, block in staged.items():
-            written = _write_rows(getattr(b, name), jnp.asarray(block), r0)
-            setattr(b, name, self._place(written))
+        if b.resident:
+            # delta upload volume: what this seal/publish actually shipped
+            # to the device (the occupancy gauges are the owner's job — it
+            # knows when a transition is complete)
+            self.metrics.counter("pack_delta_bytes_total").inc(
+                sum(arr.nbytes for arr in staged.values()))
+            r0 = jnp.int32(row0)
+            for name, block in staged.items():
+                written = _write_rows(getattr(b, name), jnp.asarray(block),
+                                      r0)
+                setattr(b, name, self._place(written))
+        else:
+            # cold bucket: the delta lands in the host copy without forcing
+            # an admission — copy-on-write so in-flight views of a reused
+            # slot keep reading the pre-mutation bytes, mirroring the
+            # functional device updates
+            host = dict(b.host)
+            for name, block in staged.items():
+                if name == "gids":
+                    continue
+                arr = host[name].copy()
+                arr[row0: row0 + self.n_shards] = block
+                host[name] = arr
+            b.host = host
+        b.gids_h = b.gids_h.copy()
+        b.gids_h[row0: row0 + self.n_shards] = gb
+        b.gen += 1
         b.seg_ids[row0: row0 + self.n_shards] = src.seg_id
         b.t_min[row0: row0 + self.n_shards] = src.t_min
         b.t_max[row0: row0 + self.n_shards] = src.t_max
@@ -722,6 +830,7 @@ class BucketedShardPack:
         b.t_min[row0: row0 + self.n_shards] = np.inf
         b.t_max[row0: row0 + self.n_shards] = -np.inf
         b.free_slots.append(e.slot)
+        b.gen += 1
         if not (b.seg_ids >= 0).any():
             # last live slot gone: release the whole capacity class, so a
             # retired jumbo bucket doesn't pin device memory at its
@@ -772,12 +881,26 @@ class BucketedShardPack:
             if pad:
                 rows = np.concatenate([rows, np.full(pad, rows[0], np.int32)])
                 cols = np.concatenate([cols, np.full(pad, cols[0], np.int32)])
-            if self.quantize:
+            if not b.resident:
+                # same sentinel scatter, applied copy-on-write to the cold
+                # host copy — a later admission uploads bytes identical to
+                # what the device scatter would have produced
+                key = "st" if self.quantize else "s"
+                host = dict(b.host)
+                arr = host[key].copy()
+                if self.quantize:
+                    arr[rows, :, cols] = PAD_META
+                else:
+                    arr[rows, cols, :] = PAD_META
+                host[key] = arr
+                b.host = host
+            elif self.quantize:
                 b.st = self._place(_mask_meta_t(b.st, jnp.asarray(rows),
                                                 jnp.asarray(cols)))
             else:
                 b.s = self._place(_mask_meta(b.s, jnp.asarray(rows),
                                              jnp.asarray(cols)))
+            b.gen += 1
         return total
 
     def sync_alive(self, alive: np.ndarray) -> int:
@@ -789,27 +912,116 @@ class BucketedShardPack:
         dead = np.concatenate(dead) if dead else np.empty(0, np.int64)
         return self.mark_dead(dead) if len(dead) else 0
 
+    # -- tier transitions (tiered storage, streaming/tiering.py) -------
+    def evict_bucket(self, cap: int) -> int:
+        """Demote one resident bucket's device block to host ``np`` copies
+        (call under the owner's lock).  In-flight views keep the device
+        arrays they captured alive; new views of this bucket read the
+        byte-identical host copy.  Returns the device bytes released."""
+        b = self.buckets.get(cap)
+        if b is None or not b.resident:
+            return 0
+        freed = b.nbytes
+        host = {}
+        names = ("codes", "st", "scales") if self.quantize else ("x", "s")
+        for name in names + (("nbrs",) if self.graph_degree else ()):
+            host[name] = np.asarray(getattr(b, name))
+            setattr(b, name, None)
+        b.gids = None
+        b.host = host
+        b.resident = False
+        b.gen += 1
+        return freed
+
+    def stage_admission(self, cap: int):
+        """Host half of an admission: snapshot a cold bucket's host arrays
+        (call under the owner's lock).  Returns ``(gen, arrays)`` or None
+        when the bucket is missing / already resident."""
+        b = self.buckets.get(cap)
+        if b is None or b.resident:
+            return None
+        arrs = dict(b.host)
+        arrs["gids"] = b.gids_h
+        return b.gen, arrs
+
+    def upload_admission(self, staged):
+        """Device half of an admission: place the staged host arrays
+        (lock-free — the expensive upload happens here, off the owner's
+        lock, mirroring ``compact_async``'s execute step)."""
+        gen, arrs = staged
+        return gen, {name: self._place(jnp.asarray(a))
+                     for name, a in arrs.items()}
+
+    def install_admission(self, cap: int, gen: int, dev) -> int:
+        """Publish an uploaded admission iff the bucket is still cold and
+        unchanged since :meth:`stage_admission` (call under the owner's
+        lock).  Returns admitted device bytes; 0 means the upload went
+        stale (a delta landed mid-upload) and was discarded."""
+        b = self.buckets.get(cap)
+        if b is None or b.resident or b.gen != gen:
+            return 0
+        for name, arr in dev.items():
+            setattr(b, name, arr)
+        b.host = None
+        b.resident = True
+        b.gen += 1
+        self._note_shape(b.n_rows, cap)
+        return b.nbytes
+
+    def admit_bucket(self, cap: int) -> int:
+        """Synchronous admission (owner's lock held throughout): upload a
+        cold bucket's host copy back to the device.  Returns admitted
+        device bytes (0 = missing or already resident)."""
+        staged = self.stage_admission(cap)
+        if staged is None:
+            return 0
+        return self.install_admission(cap, *self.upload_admission(staged))
+
     # -- read side -----------------------------------------------------
+    def _bucket_view(self, cap: int, b: _Bucket) -> BucketView:
+        """One bucket's immutable snapshot (caller holds the owner's
+        lock); cold buckets expose their host arrays in the same fields."""
+        entries = tuple(
+            (e.slot * self.n_shards, e.entry_pos)
+            for e in self._entries.values()
+            if e.cap == cap and e.entry_pos is not None
+            and len(e.entry_pos))
+        fill = (b.gids_h >= 0).sum(axis=1).astype(np.int64)
+        common = dict(seg_ids=b.seg_ids.copy(), t_min=b.t_min.copy(),
+                      t_max=b.t_max.copy(), entries=entries, fill=fill,
+                      stage_bytes=b.full_nbytes)
+        if b.resident:
+            return BucketView(cap, b.gids, x=b.x, s=b.s, codes=b.codes,
+                              st=b.st, scales=b.scales, nbrs=b.nbrs,
+                              **common)
+        h = b.host
+        return BucketView(cap, b.gids_h, x=h.get("x"), s=h.get("s"),
+                          codes=h.get("codes"), st=h.get("st"),
+                          scales=h.get("scales"), nbrs=h.get("nbrs"),
+                          resident=False, **common)
+
+    def bucket_view(self, cap: int) -> Optional[BucketView]:
+        """Fresh snapshot of one bucket (e.g. right after an admission so
+        the in-flight query dispatches the resident block)."""
+        b = self.buckets.get(cap)
+        if b is None or not (b.seg_ids >= 0).any():
+            return None
+        return self._bucket_view(cap, b)
+
     def view(self) -> PackView:
         """Immutable snapshot for one query (capture under the owner's
         lock).  Buckets with no live slot are dropped, so an all-free
-        bucket costs queries nothing."""
+        bucket costs queries nothing.  Cold buckets are included — their
+        host arrays dispatch through the same kernels (streamed to the
+        device transiently), keeping answers bit-for-bit resident."""
         views = []
         for cap in sorted(self.buckets):
             b = self.buckets[cap]
             if (b.seg_ids >= 0).any():
-                entries = tuple(
-                    (e.slot * self.n_shards, e.entry_pos)
-                    for e in self._entries.values()
-                    if e.cap == cap and e.entry_pos is not None
-                    and len(e.entry_pos))
-                views.append(BucketView(cap, b.gids, b.seg_ids.copy(),
-                                        b.t_min.copy(), b.t_max.copy(),
-                                        x=b.x, s=b.s, codes=b.codes,
-                                        st=b.st, scales=b.scales,
-                                        nbrs=b.nbrs, entries=entries))
+                views.append(self._bucket_view(cap, b))
         return PackView(self.epoch, self.n_shards, self.m, tuple(views),
-                        self.nbytes, quantize=self.quantize)
+                        self.nbytes, quantize=self.quantize,
+                        host_nbytes=self.host_nbytes)
 
 
 def build_bucketed_pack(sources: Sequence[SegmentShardSource], n_shards: int,
@@ -817,18 +1029,25 @@ def build_bucketed_pack(sources: Sequence[SegmentShardSource], n_shards: int,
                         cap_multiple: int = 256,
                         quantize: Optional[str] = None,
                         metrics=None,
-                        graph_degree: Optional[int] = None
+                        graph_degree: Optional[int] = None,
+                        resident_default: bool = True
                         ) -> BucketedShardPack:
     """Cold-build a :class:`BucketedShardPack` (restore / first query /
     bucket-geometry change): the same :meth:`~BucketedShardPack.add_segment`
     delta applied once per segment, so an incrementally maintained pack and
-    a from-scratch build of the same segments answer identically."""
+    a from-scratch build of the same segments answer identically.
+
+    ``resident_default=False`` builds every bucket host-side (no device
+    uploads) — the budgeted-tier path then admits only the buckets that fit
+    ``StreamConfig.device_budget_bytes`` instead of staging the whole
+    corpus before the first restored query."""
     if not sources:
         raise ValueError("build_bucketed_pack needs at least one segment")
     pack = BucketedShardPack(n_shards, sources[0].x.shape[1],
                              sources[0].s.shape[1], epoch=epoch, mesh=mesh,
                              cap_multiple=cap_multiple, quantize=quantize,
-                             metrics=metrics, graph_degree=graph_degree)
+                             metrics=metrics, graph_degree=graph_degree,
+                             resident_default=resident_default)
     for src in sources:
         pack.add_segment(src)
     return pack
@@ -908,7 +1127,8 @@ def _merge_shard_topk(ids, dd, gid_stack, active, k):
 def pack_search_blocks(view: PackView, queries: np.ndarray,
                        filt: Optional[Filter], k: int,
                        t_lo: float = -np.inf, t_hi: float = np.inf,
-                       metric: str = "l2", trace=None, observe=None
+                       metric: str = "l2", trace=None, observe=None,
+                       on_cold=None
                        ) -> List[Tuple[np.ndarray, np.ndarray]]:
     """One fused-kernel dispatch per non-empty, temporally unpruned bucket.
 
@@ -929,6 +1149,12 @@ def pack_search_blocks(view: PackView, queries: np.ndarray,
     callable) receives one per-bucket observation per call — rows seen,
     rows temporally pruned, candidate fill, and whether the dispatch hit
     the jit cache.  Both default to off with zero overhead.
+
+    Cold (non-resident) buckets dispatch the *same* kernels over their
+    host-held block copies — jax stages the arrays to the device for the
+    dispatch and drops them after — so their answers are bit-for-bit what
+    the resident block would return.  ``on_cold`` (``f(cap, stage_bytes)``)
+    fires once per dispatched cold bucket for tier-miss accounting.
     """
     queries = np.atleast_2d(np.asarray(queries, np.float32))
     trace = NULL_TRACE if trace is None else trace
@@ -942,6 +1168,8 @@ def pack_search_blocks(view: PackView, queries: np.ndarray,
             if observe is not None:       # whole-block temporal prune
                 observe(bv.cap, rows=rows, active_rows=0)
             continue
+        if not bv.resident and on_cold is not None:
+            on_cold(bv.cap, bv.stage_bytes)
         kk = min(k, bv.cap)               # per-shard list length
         # merged width: for k > cap the per-shard lists (= whole shards)
         # still hold up to rows * kk candidates, so the top-k stays exact
@@ -949,7 +1177,8 @@ def pack_search_blocks(view: PackView, queries: np.ndarray,
         traces0 = dispatch_trace_count() if want_obs else 0
         with trace.span("bucket_dispatch", cap=bv.cap, rows=rows,
                         active_rows=n_active, k_out=k_out,
-                        quantized=bv.quantized) as sp:
+                        quantized=bv.quantized,
+                        resident=bv.resident) as sp:
             if bv.quantized:
                 ids, dd = sharded_quant_filtered_topk(
                     queries, bv.codes, bv.st, bv.scales, filt, kk,
@@ -979,7 +1208,8 @@ def pack_search(pack, queries: np.ndarray, filt: Optional[Filter],
                 k: int, t_lo: float = -np.inf, t_hi: float = np.inf,
                 metric: str = "l2", lookup=None,
                 rerank_multiple: int = 4, trace=None,
-                observe=None) -> Tuple[np.ndarray, np.ndarray]:
+                observe=None, on_cold=None
+                ) -> Tuple[np.ndarray, np.ndarray]:
     """Fan one query batch out over every active shard of the pack and merge
     the shard-local top-k exactly.
 
@@ -1003,7 +1233,7 @@ def pack_search(pack, queries: np.ndarray, filt: Optional[Filter],
             else k
         blocks = pack_search_blocks(view, queries, filt, k_fetch, t_lo=t_lo,
                                     t_hi=t_hi, metric=metric, trace=trace,
-                                    observe=observe)
+                                    observe=observe, on_cold=on_cold)
         if not blocks:
             return (np.full((b, k), -1, np.int64),
                     np.full((b, k), np.inf, np.float32))

@@ -51,6 +51,11 @@ class DocumentStore:
     way, turning on the cost-based sealed read path (scan vs. stitched
     graph traversal per bucket — ``repro.streaming.planner``), which also
     rides the bucketed pack and so forces sharding on.
+    ``device_budget_bytes`` overlays ``stream_cfg.device_budget_bytes``
+    (also forcing sharding on): the store's device memory becomes a
+    budgeted cache over the sealed corpus — cold buckets demote to host
+    arrays and stream through the same kernels exactly
+    (``repro.streaming.tiering``).
     """
 
     def __init__(self, docs: Sequence[Document],
@@ -58,7 +63,8 @@ class DocumentStore:
                  streaming: bool = False,
                  stream_cfg: Optional[StreamConfig] = None,
                  shard_mesh=None, quantize: Optional[str] = None,
-                 read_path: Optional[str] = None):
+                 read_path: Optional[str] = None,
+                 device_budget_bytes: Optional[int] = None):
         self.docs = list(docs)
         self.streaming = bool(streaming)
         x = np.stack([d.embedding for d in self.docs]).astype(np.float32)
@@ -74,6 +80,10 @@ class DocumentStore:
                 stream_cfg = dataclasses.replace(
                     stream_cfg, read_path=read_path,
                     n_shards=max(stream_cfg.n_shards, 1))
+            if device_budget_bytes is not None:
+                stream_cfg = dataclasses.replace(
+                    stream_cfg, device_budget_bytes=device_budget_bytes,
+                    n_shards=max(stream_cfg.n_shards, 1))
             self.manager = SegmentManager(x.shape[1], s.shape[1], stream_cfg,
                                           shard_mesh=shard_mesh)
             self.manager.ingest(x, s)
@@ -85,6 +95,9 @@ class DocumentStore:
             if read_path is not None and read_path != "scan":
                 raise ValueError("read_path requires a streaming store "
                                  "(DocumentStore(streaming=True))")
+            if device_budget_bytes is not None:
+                raise ValueError("device_budget_bytes requires a streaming "
+                                 "store (DocumentStore(streaming=True))")
             self.manager = None
             self.index = CubeGraphIndex.build(x, s, index_cfg)
         self._init_obs()

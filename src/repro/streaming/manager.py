@@ -109,6 +109,23 @@ class StreamConfig:
     # the first query after a growth pays no trace (exp12's residual
     # spikes).
     pack_warm_compile: bool = True
+    # Tiered storage (streaming/tiering.py; requires n_shards >= 1 and
+    # incremental_pack): with a byte budget set, HBM becomes a cache —
+    # the bucketed pack keeps at most this many device bytes of bucket
+    # blocks resident, demoting the coldest (by BucketStats dispatch
+    # history + query-window overlap) to host arrays.  Cold buckets
+    # stream through the same fused kernels per dispatch, so answers
+    # stay bit-for-bit the all-resident ones; the planner prices the
+    # cold dispatch ("host_scan") against re-admission.  ``None``
+    # (default) keeps every block resident forever — the pre-tiering
+    # behavior, byte-for-byte.
+    device_budget_bytes: Optional[int] = None
+    tier_window_history: int = 12         # query windows kept for drift
+    # Stage cold buckets whose time span overlaps the *predicted* next
+    # query window (the recent windows' drift, extrapolated) on a daemon
+    # thread after each sharded query — same at-most-one / lock+epoch
+    # discipline as compact_async.
+    tier_prefetch: bool = True
     # Observability (repro.obs): lifecycle/query counters, latency
     # histograms, and the rolling per-bucket BucketStats accumulator that
     # feeds the cost-based planner.  Off -> every instrumented call site
@@ -185,6 +202,14 @@ class SegmentManager:
                 raise ValueError("read_path='graph'/'auto' requires "
                                  "incremental_pack=True (graph blocks ride "
                                  "the bucketed pack)")
+        if cfg.device_budget_bytes is not None:
+            if cfg.device_budget_bytes < 0:
+                raise ValueError("device_budget_bytes must be >= 0")
+            if cfg.n_shards < 1 or not cfg.incremental_pack:
+                raise ValueError("device_budget_bytes requires the sharded "
+                                 "incremental pack (n_shards >= 1, "
+                                 "incremental_pack=True) — residency is a "
+                                 "bucketed-pack concept")
         self.time_dim = cfg.time_dim % m
         self.delta = DeltaBuffer(d, m, self.time_dim,
                                  capacity=min(cfg.seal_max_points, 4096))
@@ -211,6 +236,15 @@ class SegmentManager:
                          "store_gc_points": 0}
         from ..obs import StreamObs
         self.obs = StreamObs(enabled=cfg.obs_enabled)
+        # Tiered storage: TierState owns the budget + query-window drift
+        # history; the manager serializes every evict/admit under _lock.
+        self.tier = None
+        self._prefetch_thread: Optional[threading.Thread] = None
+        if cfg.device_budget_bytes is not None:
+            from .tiering import TierState
+            self.tier = TierState(cfg.device_budget_bytes,
+                                  registry=self.obs.registry,
+                                  window_history=cfg.tier_window_history)
         self.persist = None                         # StreamPersistence
         self._suspend_ckpt = False                  # batched seals in ingest
         if cfg.persist_dir and not _restoring:
@@ -469,6 +503,7 @@ class SegmentManager:
                     pack.add_segment(src)
             pack.epoch = self.epoch
             self._update_pack_gauges(pack)
+            self._tier_enforce(pack)
         except Exception:                 # pragma: no cover - defensive
             self._pack = None
 
@@ -483,8 +518,179 @@ class SegmentManager:
         reg.gauge("pack_nbytes").set(pack.nbytes)
         reg.gauge("pack_segments").set(pack.n_segments)
         for cap, row in pack.bucket_stats().items():
-            for key in ("rows", "live_rows", "segments"):
+            for key in ("rows", "live_rows", "segments", "resident"):
                 reg.gauge(f'pack_bucket_{key}{{cap="{cap}"}}').set(row[key])
+
+    # ------------------------------------------------------------------
+    # Tiered storage (streaming/tiering.py): HBM as a budgeted cache
+    # ------------------------------------------------------------------
+    def _bucket_meta(self, pack) -> List[dict]:
+        """Per-bucket policy inputs for the tier (caller holds the lock):
+        capacity, residency, full block bytes, the bucket's packed time
+        span, and its rolling BucketStats entry (None before any
+        observation)."""
+        snap = (self.obs.bucket_stats.snapshot()
+                if self.obs.bucket_stats is not None else {})
+        meta = []
+        for cap, b in pack.buckets.items():
+            alloc = b.seg_ids >= 0
+            if not alloc.any():
+                continue
+            meta.append({"cap": cap, "resident": b.resident,
+                         "nbytes": b.full_nbytes,
+                         "t_min": float(b.t_min[alloc].min()),
+                         "t_max": float(b.t_max[alloc].max()),
+                         "stats": snap.get(str(cap))})
+        return meta
+
+    def _tier_enforce(self, pack, protect: Tuple[int, ...] = ()) -> int:
+        """Evict coldest-first until the pack's resident bytes fit the
+        budget (caller holds the lock; no-op without a tier or with a
+        legacy pack).  ``protect`` names capacities a caller just admitted
+        — never the immediate eviction victim (admission thrash).
+        Returns device bytes freed."""
+        if self.tier is None or not hasattr(pack, "evict_bucket"):
+            return 0
+        freed = 0
+        need = pack.nbytes - self.tier.budget_bytes
+        if need > 0:
+            meta = [m for m in self._bucket_meta(pack)
+                    if m["cap"] not in protect]
+            for cap in self.tier.pick_victims(meta, need):
+                freed += pack.evict_bucket(cap)
+                self.obs.registry.counter("tier_evictions_total").inc()
+                if pack.nbytes <= self.tier.budget_bytes:
+                    break
+        self._update_tier_gauges(pack)
+        return freed
+
+    def _update_tier_gauges(self, pack) -> None:
+        """Refresh the tier occupancy gauges (caller holds the lock)."""
+        if self.tier is None:
+            return
+        reg = self.obs.registry
+        reg.gauge("tier_budget_bytes").set(self.tier.budget_bytes)
+        reg.gauge("tier_resident_bytes").set(pack.nbytes)
+        reg.gauge("tier_host_bytes").set(getattr(pack, "host_nbytes", 0))
+
+    def tier_admit(self, cap: int, prefetch: bool = False,
+                   expect_epoch: Optional[int] = None):
+        """Admit one cold bucket's block back to the device (the query
+        path calls this when the planner prices ``admit_cheaper``), then
+        re-enforce the budget with the admitted bucket protected.  Returns
+        the refreshed :class:`~..distributed.segment_shards.BucketView`
+        (resident), or None when there is nothing to admit or the block
+        alone exceeds the budget (it stays cold and streams per
+        dispatch).  ``expect_epoch`` guards an in-flight query's snapshot:
+        when the pack has moved past it the admission still happens (it
+        helps the next query) but None is returned, so the caller keeps
+        dispatching its epoch-consistent cold view."""
+        with self._lock:
+            pack = self._pack
+            if (self.tier is None or pack is None
+                    or not hasattr(pack, "admit_bucket")):
+                return None
+            b = pack.buckets.get(cap)
+            if b is None:
+                return None
+            stale = (expect_epoch is not None
+                     and pack.epoch != expect_epoch)
+            if not b.resident:
+                if b.full_nbytes > self.tier.budget_bytes:
+                    return None
+                if not pack.admit_bucket(cap):
+                    return None         # pragma: no cover - defensive
+                reg = self.obs.registry
+                reg.counter("tier_admissions_total").inc()
+                if prefetch:
+                    reg.counter("tier_prefetch_admissions_total").inc()
+                # the dispatch that triggered this admission compiles the
+                # resident signature during the same query — drop the
+                # warm-shape note instead of re-tracing it later
+                pack.drain_warm_shapes()
+            self._tier_enforce(pack, protect=(cap,))
+            return None if stale else pack.bucket_view(cap)
+
+    def _tier_warm_admit(self, pack) -> None:
+        """Budget-bounded warm-up of a cold-built pack (restore / first
+        sharded query; caller holds the lock): admit buckets
+        most-recent-span-first while they fit, then flip
+        ``resident_default`` so buckets created by later deltas start on
+        the device (enforcement keeps the budget).  This is what replaces
+        exp11's restore-time full resident build — under a budget the
+        cold build uploads only what fits, not the whole corpus."""
+        for m in sorted(self._bucket_meta(pack), key=lambda m: -m["t_max"]):
+            if (not m["resident"]
+                    and pack.nbytes + m["nbytes"] <= self.tier.budget_bytes):
+                pack.admit_bucket(m["cap"])
+                self.obs.registry.counter("tier_admissions_total").inc()
+        pack.resident_default = True
+        # the first query against this pack compiles its dispatches anyway
+        pack.drain_warm_shapes()
+        self._update_tier_gauges(pack)
+
+    def maybe_prefetch(self) -> Optional[threading.Thread]:
+        """Stage cold buckets the predicted next query window will touch,
+        on a daemon thread (at most one alive — the compact_async
+        discipline).  The query path calls this after each sharded
+        dispatch; returns the thread, or None when there is nothing to
+        prefetch."""
+        if self.tier is None or not self.cfg.tier_prefetch:
+            return None
+        with self._lock:
+            pack = self._pack
+            if pack is None or not hasattr(pack, "stage_admission"):
+                return None
+            if not self.tier.prefetch_targets(self._bucket_meta(pack)):
+                return None
+            t = self._prefetch_thread
+            if t is not None and t.is_alive():
+                return t
+            t = threading.Thread(target=self._prefetch_once, daemon=True,
+                                 name="cubegraph-prefetcher")
+            self._prefetch_thread = t
+        t.start()
+        return t
+
+    def _prefetch_once(self) -> int:
+        """One prefetch round: snapshot the cold targets under the lock,
+        upload their host blocks lock-free, and install each upload under
+        the lock only if the pack and the bucket's mutation generation
+        are unchanged (a delta that landed mid-upload silently discards
+        the stale upload — the bucket stays cold and correct).  Returns
+        buckets admitted."""
+        with self._lock:
+            pack = self._pack
+            if (self.tier is None or pack is None
+                    or not hasattr(pack, "stage_admission")):
+                return 0
+            staged = []
+            budget = self.tier.budget_bytes
+            for cap in self.tier.prefetch_targets(self._bucket_meta(pack)):
+                b = pack.buckets.get(cap)
+                if b is None or b.resident or b.full_nbytes > budget:
+                    continue
+                st = pack.stage_admission(cap)
+                if st is not None:
+                    staged.append((cap, st))
+        if not staged:
+            return 0
+        ups = [(cap, pack.upload_admission(st)) for cap, st in staged]
+        admitted = 0
+        with self._lock:
+            if self._pack is not pack:
+                return 0
+            reg = self.obs.registry
+            for cap, (gen, dev) in ups:
+                if pack.install_admission(cap, gen, dev):
+                    admitted += 1
+                    reg.counter("tier_admissions_total").inc()
+                    reg.counter("tier_prefetch_admissions_total").inc()
+            if admitted:
+                self._tier_enforce(pack)
+        if admitted:
+            self._warm_pack()
+        return admitted
 
     def _checkpoint_if_attached(self) -> None:
         """Durably checkpoint after a segment-list transition (no-op without
@@ -808,11 +1014,16 @@ class SegmentManager:
         if not sources:
             return None
         if self.cfg.incremental_pack:
+            # under a tier budget the cold build stays host-side
+            # (resident_default=False — no device upload of blocks the
+            # budget would immediately evict); _tier_warm_admit then
+            # uploads only what fits, most-recent-span first
             pack = build_bucketed_pack(
                 sources, self.cfg.n_shards, epoch, mesh=self.shard_mesh,
                 cap_multiple=self.cfg.pack_cap_multiple,
                 quantize=self.cfg.quantize, metrics=self.obs.registry,
-                graph_degree=self.graph_degree)
+                graph_degree=self.graph_degree,
+                resident_default=self.tier is None)
             # a cold build's dispatches compile during this same query
             # anyway — drop its warm-shape backlog instead of re-tracing
             pack.drain_warm_shapes()
@@ -823,6 +1034,8 @@ class SegmentManager:
             pack.sync_alive(self.alive)
             if self.epoch == epoch:
                 self._pack = pack
+                if self.tier is not None and hasattr(pack, "admit_bucket"):
+                    self._tier_warm_admit(pack)
                 self._update_pack_gauges(pack)
             return _read_state(pack)
 
@@ -871,6 +1084,12 @@ class SegmentManager:
                 "epoch": self.epoch,
                 "n_shards": self.cfg.n_shards,
                 "quantize": self.cfg.quantize,
+                "tier": (None if self.tier is None else {
+                    "budget_bytes": self.tier.budget_bytes,
+                    "resident_bytes": 0 if pack is None else int(pack.nbytes),
+                    "host_bytes": (0 if pack is None else
+                                   int(getattr(pack, "host_nbytes", 0))),
+                }),
                 "store_resident_points": self.store.resident_points,
                 "store_nbytes": self.store.nbytes,
                 "obs": self.obs.snapshot(),

@@ -645,6 +645,14 @@ def restore_manager(root: str, cfg=None, shard_mesh=None, resume: bool = True,
     the final bitmap.  With ``resume`` (default) the manager re-attaches to
     ``root`` and keeps persisting; pass ``resume=False`` for a read-only
     clone (e.g. a serving replica warm-starting from a shared export).
+
+    The restored manager honors ``StreamConfig.device_budget_bytes``
+    (persisted, or overridden via ``cfg``): its first sharded query
+    cold-builds the bucket blocks *host-side* from the mmapped artifacts
+    and admits only the most-recent buckets that fit the budget
+    (``SegmentManager._tier_warm_admit``), instead of staging the whole
+    corpus on device before answering — the tiered-storage fix for
+    exp11's restored-first-query cost on cold-heavy corpora.
     """
     import io
 

@@ -1,15 +1,22 @@
 """Cost-based read-path planner: scan vs. stitched graph traversal.
 
-The sealed-segment read path has two per-bucket modes (ROADMAP item 1):
+The sealed-segment read path has three per-bucket modes (ROADMAP item 1):
 
 * **scan** — the fused (possibly int8) filtered top-k kernel over the whole
-  bucket block: cost linear in ``active_rows * cap`` padded rows, fully
-  regular, exact (quantized buckets rerank).
+  device-resident bucket block: cost linear in ``active_rows * cap`` padded
+  rows, fully regular, exact (quantized buckets rerank).
 * **graph** — the stitched beam traversal (``kernels/graph_topk``) over the
   bucket's adjacency block: cost roughly ``hops * width * degree`` gathers,
   i.e. near-logarithmic in bucket points, but approximate and wasteful
   when the filter is so selective that routing mostly burns hops on
   φ-failing points.
+* **host_scan** — the tiered-storage cold path
+  (``streaming/tiering.py``): the bucket's block is host-resident (evicted
+  under ``StreamConfig.device_budget_bytes``) and streams through the same
+  fused kernel per dispatch — exact, but every dispatch pays the staging
+  transfer.  The planner prices it against "admit the block first, then
+  scan/traverse it resident" (``admit_cost_per_byte``), so a repeatedly-hit
+  cold bucket is re-admitted instead of re-streamed.
 
 This module picks the mode *per bucket per dispatch* from the rolling
 :class:`~repro.obs.metrics.BucketStats` snapshot (the observation feed PR 6
@@ -67,6 +74,13 @@ class PlannerCosts:
     min_graph_rows: int = 512           # don't bother traversing tiny
                                         # buckets — scan is one cheap
                                         # dispatch there
+    host_scan_multiplier: float = 4.0   # cold (host-streamed) scan penalty
+                                        # per padded row vs. the resident
+                                        # scan: the block crosses the host
+                                        # link on every dispatch
+    admit_cost_per_byte: float = 0.05   # one-shot staging cost of admitting
+                                        # a cold bucket block, in
+                                        # row-equivalents per byte uploaded
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,8 +88,10 @@ class PlanDecision:
     """One bucket's planned mode plus the estimates behind it."""
 
     cap: int
-    mode: str                           # "scan" | "graph"
-    est_scan: float
+    mode: str                           # "scan" | "graph" | "host_scan"
+    est_scan: float                     # resident-scan estimate (host_scan
+                                        # decisions price est_scan *
+                                        # host_scan_multiplier on top)
     est_graph: float
     reason: str
 
@@ -87,45 +103,89 @@ def estimate_scan_cost(cap: int, active_rows: int,
 
 
 def estimate_graph_cost(cap: int, active_rows: int, n_seeds: int,
-                        costs: PlannerCosts) -> float:
-    """Expected traversal cost: seeds plus hops ~ log2(bucket points)."""
-    n_points = max(float(active_rows) * float(cap), 2.0)
+                        costs: PlannerCosts,
+                        n_points: Optional[float] = None) -> float:
+    """Expected traversal cost: seeds plus hops ~ log2(live bucket points).
+
+    ``n_points`` is the *live* point estimate (from the pack's per-row fill
+    counts); without one the padded ``active_rows * cap`` upper bound is
+    used, which inflates the hop estimate for partially-filled buckets and
+    shifts the scan/graph crossover — callers with fill information should
+    always pass it."""
+    if n_points is None:
+        n_points = float(active_rows) * float(cap)
+    n_points = max(float(n_points), 2.0)
     hops = costs.base_hops + costs.hops_per_log2 * math.log2(n_points)
     return hops * costs.hop_cost + float(n_seeds) * costs.seed_cost
 
 
+def _graph_guard(cap: int, active_rows: int, stats: Optional[Dict],
+                 costs: PlannerCosts) -> Optional[str]:
+    """Reason the auto policy must not traverse this bucket, else None."""
+    if active_rows * cap < costs.min_graph_rows:
+        return "small_bucket"
+    if stats is not None:
+        sel = stats["selectivity"]
+        if sel is not None and sel < costs.min_selectivity:
+            return "selective_filter"
+    return None
+
+
 def decide_bucket(cap: int, active_rows: int, n_seeds: int,
                   graph_ready: bool, stats: Optional[Dict],
-                  costs: PlannerCosts, read_path: str = "auto"
-                  ) -> PlanDecision:
-    """Pick scan vs. graph for one bucket dispatch.
+                  costs: PlannerCosts, read_path: str = "auto",
+                  resident: bool = True, stage_bytes: int = 0,
+                  n_points: Optional[float] = None) -> PlanDecision:
+    """Pick scan vs. graph vs. host_scan for one bucket dispatch.
 
     ``stats`` is this bucket's entry from a ``BucketStats`` snapshot (or
     ``None`` before any observation); only :data:`REQUIRED_STATS_KEYS` are
     consulted.  ``graph_ready`` and ``n_seeds`` gate the graph mode: a
     bucket without a staged adjacency block or without live entry points
-    always scans regardless of cost (answers must never depend on a
-    missing structure).
+    never traverses regardless of cost (answers must never depend on a
+    missing structure).  ``resident=False`` marks a bucket whose block the
+    tier evicted to host memory: it either streams through the kernel cold
+    (``host_scan`` — exact, pays ``host_scan_multiplier`` per dispatch) or,
+    when the one-shot staging cost prices lower, is admitted first and
+    dispatched resident (mode ``scan``/``graph`` with reason
+    ``admit_cheaper`` — the query path performs the admission).
+    ``n_points`` is the live-fill estimate forwarded to
+    :func:`estimate_graph_cost`.
     """
     est_scan = estimate_scan_cost(cap, active_rows, costs)
-    est_graph = estimate_graph_cost(cap, active_rows, n_seeds, costs)
+    est_graph = estimate_graph_cost(cap, active_rows, n_seeds, costs,
+                                    n_points=n_points)
     can_graph = graph_ready and n_seeds > 0
+    if not resident:
+        est_host = est_scan * costs.host_scan_multiplier
+        stage = float(stage_bytes) * costs.admit_cost_per_byte
+        if read_path == "graph" and can_graph:
+            return PlanDecision(cap, "graph", est_scan, est_graph, "forced")
+        if read_path == "scan":
+            return PlanDecision(cap, "host_scan", est_scan, est_graph,
+                                "forced")
+        best, mode = est_scan, "scan"
+        if can_graph and _graph_guard(cap, active_rows, stats, costs) \
+                is None and est_graph < est_scan:
+            best, mode = est_graph, "graph"
+        if stage + best < est_host:
+            return PlanDecision(cap, mode, est_scan, est_graph,
+                                "admit_cheaper")
+        return PlanDecision(cap, "host_scan", est_scan, est_graph,
+                            "cold_scan_cheaper")
     if not can_graph:
         return PlanDecision(cap, "scan", est_scan, est_graph, "graph_unready")
     if read_path == "scan":
         return PlanDecision(cap, "scan", est_scan, est_graph, "forced")
     if read_path == "graph":
         return PlanDecision(cap, "graph", est_scan, est_graph, "forced")
-    if active_rows * cap < costs.min_graph_rows:
-        return PlanDecision(cap, "scan", est_scan, est_graph, "small_bucket")
-    if stats is not None:
-        sel = stats["selectivity"]
-        if sel is not None and sel < costs.min_selectivity:
-            return PlanDecision(cap, "scan", est_scan, est_graph,
-                                "selective_filter")
+    guard = _graph_guard(cap, active_rows, stats, costs)
+    if guard is not None:
+        return PlanDecision(cap, "scan", est_scan, est_graph, guard)
     if est_graph < est_scan:
-        return PlanDecision(cap, "graph", est_scan, est_graph, "cheaper")
-    return PlanDecision(cap, "scan", est_scan, est_graph, "cheaper")
+        return PlanDecision(cap, "graph", est_scan, est_graph,
+                            "graph_cheaper")
+    return PlanDecision(cap, "scan", est_scan, est_graph, "scan_cheaper")
 
 
 def plan_read_paths(view, read_path: str, stats_snapshot: Dict,
@@ -146,14 +206,21 @@ def plan_read_paths(view, read_path: str, stats_snapshot: Dict,
         n_active = int(np.count_nonzero(active))
         if n_active == 0:
             continue
+        resident = getattr(bv, "resident", True)
+        fill = getattr(bv, "fill", None)
+        n_points = None if fill is None else float(fill[active].sum())
         if not graph_allowed:
             plan[bv.cap] = PlanDecision(
-                bv.cap, "scan", estimate_scan_cost(bv.cap, n_active, costs),
+                bv.cap, "scan" if resident else "host_scan",
+                estimate_scan_cost(bv.cap, n_active, costs),
                 float("inf"), "filter_not_encodable")
             continue
         seeds = bucket_graph_seeds(bv, t_lo, t_hi)
         plan[bv.cap] = decide_bucket(bv.cap, n_active, len(seeds),
                                      bv.graph_ready,
                                      stats_snapshot.get(str(bv.cap)),
-                                     costs, read_path)
+                                     costs, read_path, resident=resident,
+                                     stage_bytes=getattr(bv, "stage_bytes",
+                                                         0),
+                                     n_points=n_points)
     return plan

@@ -126,7 +126,8 @@ def _plan_pack(manager, pack, filt, rp, t_lo, t_hi, obs, registry):
 
 
 def _graph_search_blocks(manager, pack, buckets, queries, filt, k,
-                         t_lo, t_hi, metric, trace, registry):
+                         t_lo, t_hi, metric, trace, registry,
+                         observe=None, on_cold=None):
     """Stitched-traversal dispatch for the buckets the planner sent to
     ``graph`` mode.
 
@@ -135,7 +136,10 @@ def _graph_search_blocks(manager, pack, buckets, queries, filt, k,
     (union across graph buckets — gids are disjoint) before joining the
     merge.  A bucket whose traversal is unavailable after all (filter not
     encodable, no live seeds — the planner should have gated these) falls
-    back to the ordinary scan for that bucket alone.  Returns
+    back to the ordinary scan for that bucket alone; the fallback threads
+    the same ``observe`` / ``on_cold`` hooks as the main scan path, so a
+    fallback dispatch still feeds ``BucketStats`` (and therefore the
+    planner) instead of silently starving it.  Returns
     ``(blocks_g, blocks_d)`` lists.
     """
     import dataclasses as _dc
@@ -164,13 +168,15 @@ def _graph_search_blocks(manager, pack, buckets, queries, filt, k,
                 gg, dd = pack_search(
                     sub, queries, filt, k, t_lo=t_lo, t_hi=t_hi,
                     metric=metric, lookup=manager.get_points,
-                    rerank_multiple=cfg.rerank_multiple, trace=trace)
+                    rerank_multiple=cfg.rerank_multiple, trace=trace,
+                    observe=observe, on_cold=on_cold)
                 blocks_g.append(gg)
                 blocks_d.append(dd)
             else:
                 for gg, dd in pack_search_blocks(
                         sub, queries, filt, k, t_lo=t_lo, t_hi=t_hi,
-                        metric=metric, trace=trace):
+                        metric=metric, trace=trace, observe=observe,
+                        on_cold=on_cold):
                     blocks_g.append(gg)
                     blocks_d.append(dd)
             continue
@@ -268,6 +274,8 @@ def query_segments(manager, queries: np.ndarray, filt: Optional[Filter],
         # racing delete — nothing sealed to search, fall through.
         pack = manager.shard_pack(epoch, live_segs)
         dt_ms = 0.0
+        tier = getattr(manager, "tier", None)
+        on_cold = None
         if pack is not None:
             # cost-based routing: with read_path != "scan" the planner
             # splits the pack's buckets into a scan subset (dispatched
@@ -277,10 +285,36 @@ def query_segments(manager, queries: np.ndarray, filt: Optional[Filter],
                   else str(read_path))
             scan_pack = pack
             graph_bvs: tuple = ()
+            if tier is not None and isinstance(pack, PackView):
+                # feed the query window's drift to the prefetch predictor
+                # and count cold (streamed) dispatches as tier misses
+                tier.note_window(t_lo, t_hi)
+
+                def on_cold(cap, stage_bytes, _reg=registry):
+                    _reg.counter("tier_miss_total").inc()
             if isinstance(pack, PackView) and rp != "scan":
                 import dataclasses as _dc
-                _, graph_caps = _plan_pack(manager, pack, filt, rp,
-                                           t_lo, t_hi, obs, registry)
+                plan, graph_caps = _plan_pack(manager, pack, filt, rp,
+                                              t_lo, t_hi, obs, registry)
+                if tier is not None:
+                    # the planner priced re-admission below streaming for
+                    # these cold buckets: admit them now and dispatch the
+                    # resident block this very query.  tier_admit refuses
+                    # (returns None — keep the exact cold view) when the
+                    # block no longer fits or the pack has moved past this
+                    # query's snapshot epoch.
+                    admitted = {}
+                    for cap, dec in plan.items():
+                        if dec.reason == "admit_cheaper":
+                            nbv = manager.tier_admit(cap,
+                                                     expect_epoch=epoch)
+                            if nbv is not None:
+                                admitted[cap] = nbv
+                    if admitted:
+                        pack = _dc.replace(
+                            pack, buckets=tuple(admitted.get(bv.cap, bv)
+                                                for bv in pack.buckets))
+                        scan_pack = pack
                 if graph_caps:
                     graph_bvs = tuple(bv for bv in pack.buckets
                                       if bv.cap in graph_caps)
@@ -304,7 +338,7 @@ def query_segments(manager, queries: np.ndarray, filt: Optional[Filter],
                             t_hi=t_hi, metric=metric,
                             lookup=manager.get_points,
                             rerank_multiple=manager.cfg.rerank_multiple,
-                            trace=trace, observe=observe)
+                            trace=trace, observe=observe, on_cold=on_cold)
                         blocks_g.append(gg)
                         blocks_d.append(dd)
                 elif isinstance(pack, PackView):
@@ -315,7 +349,7 @@ def query_segments(manager, queries: np.ndarray, filt: Optional[Filter],
                         for gg, dd in pack_search_blocks(
                                 scan_pack, queries, filt, k, t_lo=t_lo,
                                 t_hi=t_hi, metric=metric, trace=trace,
-                                observe=observe):
+                                observe=observe, on_cold=on_cold):
                             blocks_g.append(gg)
                             blocks_d.append(dd)
                 else:                     # legacy monolithic pack
@@ -327,7 +361,8 @@ def query_segments(manager, queries: np.ndarray, filt: Optional[Filter],
                 if graph_bvs:
                     gb_g, gb_d = _graph_search_blocks(
                         manager, pack, graph_bvs, queries, filt, k,
-                        t_lo, t_hi, metric, trace, registry)
+                        t_lo, t_hi, metric, trace, registry,
+                        observe=observe, on_cold=on_cold)
                     blocks_g.extend(gb_g)
                     blocks_d.extend(gb_d)
                 # the per-bucket spans above already blocked on their own
@@ -336,6 +371,10 @@ def query_segments(manager, queries: np.ndarray, filt: Optional[Filter],
                 block_ready((blocks_g[-1] if blocks_g else None,
                              blocks_d[-1] if blocks_d else None))
                 dt_ms = (time.perf_counter() - t0) * 1e3
+            if tier is not None:
+                # stage buckets the workload's window drift is about to
+                # touch, off the query path (daemon thread, at most one)
+                manager.maybe_prefetch()
         for seg in segments:
             st = seg.stats()
             if pack is None or seg.n_live == 0 \

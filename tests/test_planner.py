@@ -107,9 +107,11 @@ def test_decide_bucket_guards_and_forcing():
     starved = decide_bucket(4096, 64, 9, True,
                             _contract_stats(selectivity=0.001), c, "auto")
     assert (starved.mode, starved.reason) == ("scan", "selective_filter")
-    # large bucket, benign filter: the estimates decide
+    # large bucket, benign filter: the estimates decide, and the reason
+    # names the winning side (graph_cheaper / scan_cheaper)
     big = decide_bucket(4096, 64, 9, True, _contract_stats(), c, "auto")
-    assert big.reason == "cheaper"
+    assert big.reason in ("graph_cheaper", "scan_cheaper")
+    assert (big.mode == "graph") == (big.reason == "graph_cheaper")
     assert (big.mode == "graph") == (big.est_graph < big.est_scan)
 
 
@@ -196,6 +198,32 @@ try:
         _check_parity_and_recall(seed, n_shards, ops, quantize)
 except ImportError:                               # pragma: no cover
     pass
+
+
+def test_graph_fallback_dispatches_are_observed(monkeypatch):
+    """When the traversal kernel declines a bucket (returns None) the
+    scan fallback must still feed BucketStats — the planner's observation
+    loop would otherwise silently starve for exactly the buckets that
+    fall back (regression: the fallback calls dropped ``observe``)."""
+    import repro.kernels.graph_topk as gt
+    rng = np.random.default_rng(13)
+    mgr = SegmentManager(24, 3, _graph_cfg(1, read_path="graph"))
+    _apply_stream_ops(mgr, rng, [0, 2])
+    mgr.seal()
+    q = rng.normal(size=(2, 24)).astype(np.float32)
+    mgr.query(q, None, k=5)                       # build pack + compile
+
+    def _dispatches():
+        return sum(row["dispatches"]
+                   for row in mgr.stats()["obs"]["buckets"].values())
+
+    monkeypatch.setattr(gt, "bucket_graph_topk", lambda *a, **k: None)
+    before = _dispatches()
+    g, _ = mgr.query(q, None, k=5)
+    assert mgr.last_plan and all(p.mode == "graph"
+                                 for p in mgr.last_plan.values())
+    assert (g >= 0).any()                         # fallback answered
+    assert _dispatches() > before
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,474 @@
+"""Tiered bucket storage (``streaming/tiering.py``): the budget-parity
+exactness property over lifecycle interleavings, the budget invariant
+under eviction/admission churn, synchronous prefetch determinism,
+restore-under-budget, the cold-bucket planner pricing, the TierState
+policy unit contract, and the host-side top-k tie-order invariants."""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import CubeGraphConfig, IntervalFilter
+from repro.core.workloads import make_box_filter
+from repro.distributed.segment_shards import host_topk
+from repro.streaming import SegmentManager, StreamConfig
+from repro.streaming.planner import (PlannerCosts, decide_bucket,
+                                     estimate_graph_cost)
+from repro.streaming.tiering import TierState, host_reference_topk
+
+IDX_CFG = CubeGraphConfig(n_layers=2, m_intra=8, m_cross=3)
+
+# Graph priced absurdly high: the auto planner must pick a scan-family
+# mode everywhere (scan / host_scan / admit-then-scan — all exact), so
+# budgeted answers stay bit-for-bit comparable while still exercising
+# the admission pricing.
+SCAN_BIASED = PlannerCosts(hop_cost=1e12)
+
+
+def _cfg(n_shards, budget, quantize=None, **over):
+    return StreamConfig(time_dim=2, seal_max_points=120, n_shards=n_shards,
+                        compact_max_segments=3, ttl=1.5, index_cfg=IDX_CFG,
+                        quantize=quantize, device_budget_bytes=budget,
+                        graph_ef=128, **over)
+
+
+def _apply_stream_ops(mgr, rng, ops, d=24):
+    """Drive one manager through an interleaving of lifecycle ops (same op
+    coding as tests/test_planner.py: ingest/delete/seal/compact/expire)."""
+    t = getattr(mgr, "_test_t", 0.0)
+    for op in ops:
+        if op == 0 or mgr.n_total == 0:           # ingest
+            nb = int(rng.integers(40, 150))
+            x = rng.normal(size=(nb, d)).astype(np.float32)
+            s = rng.uniform(size=(nb, 3))
+            s[:, 2] = t + np.linspace(0.0, 0.05, nb)
+            t += 0.25
+            mgr.ingest(x, s)
+        elif op == 1:                             # delete
+            g = rng.integers(0, mgr.n_total, size=25)
+            mgr.delete(g)
+        elif op == 2:                             # seal
+            mgr.seal()
+        elif op == 3:                             # compact (merges + GC)
+            mgr.compact()
+        elif op == 4:                             # expire (finite ttl)
+            mgr.expire()
+    mgr._test_t = t
+
+
+# ---------------------------------------------------------------------------
+# The exactness property: a budgeted manager answers bit-for-bit like an
+# unbudgeted one after any lifecycle interleaving, for any budget
+# ---------------------------------------------------------------------------
+
+def _check_budget_parity(seed, n_shards, ops, quantize, budget):
+    """Two managers differing only in ``device_budget_bytes`` — driven
+    through the same op interleaving — must answer every filter/read-path
+    combination identically: cold buckets stream byte-identical host
+    blocks through the same kernels, so residency is invisible to
+    answers.  The budget invariant is re-checked after every query."""
+    base = SegmentManager(24, 3, _cfg(n_shards, None, quantize))
+    tiered = SegmentManager(24, 3, _cfg(n_shards, budget, quantize))
+    for mgr in (base, tiered):
+        _apply_stream_ops(mgr, np.random.default_rng(seed), ops)
+        mgr.seal()
+    assert base.tier is None
+    assert tiered.tier is not None
+    assert tiered.tier.budget_bytes == budget
+    q = np.random.default_rng(seed + 1).normal(size=(4, 24)) \
+        .astype(np.float32)
+    filters = [None, make_box_filter(3, 0.6, seed=seed),
+               IntervalFilter(dim=2, lo=np.float32(0.2),
+                              hi=np.float32(1.2))]
+    cfg_b = tiered.cfg
+    for filt in filters:
+        # forced legs pin the mode on both sides (scan <-> host_scan,
+        # graph in place over the cold adjacency block); the auto leg
+        # runs the real planner with graph priced out, which exercises
+        # the admit_cheaper / cold_scan_cheaper pricing while keeping
+        # every chosen mode exact
+        for leg in ("scan", "graph", "auto"):
+            if leg == "auto":
+                tiered.cfg = dataclasses.replace(
+                    cfg_b, planner_costs=SCAN_BIASED)
+                base.cfg = dataclasses.replace(
+                    base.cfg, planner_costs=SCAN_BIASED)
+                ga, da = base.query(q, filt, k=10, read_path="auto")
+                gb, db = tiered.query(q, filt, k=10, read_path="auto")
+                tiered.cfg = cfg_b
+            else:
+                ga, da = base.query(q, filt, k=10, read_path=leg)
+                gb, db = tiered.query(q, filt, k=10, read_path=leg)
+            assert np.array_equal(ga, gb), (filt, leg)
+            assert np.array_equal(da, db), (filt, leg)
+            st = tiered.stats()["tier"]
+            assert st["resident_bytes"] <= budget, (filt, leg, st)
+    if budget == 0 and tiered.stats()["pack_nbytes"] == 0:
+        # all-cold: the whole sealed corpus lives host-side
+        assert tiered.stats()["tier"]["host_bytes"] >= 0
+
+
+@pytest.mark.parametrize("seed,n_shards,ops,quantize,budget", [
+    (7, 1, [0, 1, 2, 0, 3, 1, 4], None, 0),        # all-cold, fp32
+    (19, 3, [0, 2, 1, 3, 0, 0, 4, 2], None, 1 << 16),  # partial, sharded
+    (23, 1, [0, 1, 2, 0, 3], "int8", 0),           # all-cold, quantized
+    (31, 3, [0, 2, 0, 2, 1, 3], "int8", 1 << 15),  # partial, quantized
+])
+def test_budget_parity(seed, n_shards, ops, quantize, budget):
+    """Deterministic interleavings of the budget-parity property (always
+    run; the hypothesis variant widens the search space when available)."""
+    _check_budget_parity(seed, n_shards, ops, quantize, budget)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(0, 10_000), n_shards=st.sampled_from([1, 3]),
+           ops=st.lists(st.integers(0, 4), min_size=3, max_size=7),
+           quantize=st.sampled_from([None, "int8"]),
+           budget=st.sampled_from([0, 1 << 14, 1 << 17]))
+    def test_budget_parity_hypothesis(seed, n_shards, ops, quantize,
+                                      budget):
+        """Hypothesis-driven interleavings of the same property."""
+        _check_budget_parity(seed, n_shards, ops, quantize, budget)
+except ImportError:                               # pragma: no cover
+    pass
+
+
+# ---------------------------------------------------------------------------
+# Eviction/prefetch churn under a drifting window: invariant + counters
+# ---------------------------------------------------------------------------
+
+def _era_managers(budget_frac=2):
+    """Two managers (unbudgeted / budgeted) over an era'd stream whose
+    segment sizes differ per era, so each era lands in its own capacity
+    bucket and the buckets tile the time axis — a drifting window then
+    forces real residency churn.  Returns (base, tiered, budget)."""
+    d = 16
+    eras = ((3, 300), (2, 600), (1, 1200))        # (segments, points)
+    rng = np.random.default_rng(71)
+    n = sum(k * sz for k, sz in eras)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    s = rng.uniform(size=(n, 3))
+    s[:, 2] = np.linspace(0.0, 9.0, n)
+
+    def _ingest(mgr):
+        lo = 0
+        for n_segs, size in eras:
+            for _ in range(n_segs):
+                mgr.ingest(x[lo:lo + size], s[lo:lo + size])
+                mgr.seal()
+                lo += size
+
+    def _mk(budget):
+        return SegmentManager(d, 3, StreamConfig(
+            time_dim=2, seal_max_points=1 << 30, n_shards=2,
+            device_budget_bytes=budget, index_cfg=IDX_CFG))
+
+    base = _mk(None)
+    _ingest(base)
+    q = x[rng.integers(0, n, 4)].copy()
+    base.query(q, None, k=10)                     # build + size the pack
+    budget = max(base.stats()["pack_nbytes"] // budget_frac, 1)
+    tiered = _mk(budget)
+    _ingest(tiered)
+    return base, tiered, budget, q
+
+
+def test_tier_churn_budget_invariant_and_counters():
+    """A window drifting across the eras keeps resident bytes <= budget
+    at every step, answers bit-for-bit the unbudgeted manager's, and
+    moves the eviction / prefetch-admission / miss counters; a second
+    synchronous prefetch round for the same window is a no-op."""
+    base, tiered, budget, q = _era_managers()
+    for lo in np.linspace(0.0, 6.0, 7):
+        f = IntervalFilter(dim=2, lo=np.float32(lo), hi=np.float32(lo + 3))
+        g_b, d_b = base.query(q, f, k=10, read_path="scan")
+        g_t, d_t = tiered.query(q, f, k=10, read_path="scan")
+        tiered._prefetch_once()                   # deterministic round
+        assert np.array_equal(g_b, g_t)
+        assert np.array_equal(d_b, d_t)
+        st = tiered.stats()["tier"]
+        assert st["resident_bytes"] <= budget
+        assert st["resident_bytes"] + st["host_bytes"] > 0
+    # the window parked: everything it needs is staged, so another
+    # synchronous round admits nothing
+    assert tiered._prefetch_once() == 0
+    counters = tiered.stats()["obs"]["metrics"]["counters"]
+    assert counters.get("tier_evictions_total", 0) > 0
+    assert counters.get("tier_prefetch_admissions_total", 0) > 0
+    assert counters.get("tier_miss_total", 0) > 0
+    # gauges track the same numbers the stats block reports
+    gauges = tiered.stats()["obs"]["metrics"]["gauges"]
+    assert gauges["tier_budget_bytes"] == budget
+    assert gauges["tier_resident_bytes"] <= budget
+
+
+def test_prefetch_disabled_and_thread_discipline():
+    """``tier_prefetch=False`` turns maybe_prefetch into a no-op; enabled,
+    it runs at most one daemon round that respects the budget."""
+    _, tiered, budget, q = _era_managers()
+    tiered.query(q, IntervalFilter(dim=2, lo=np.float32(0.0),
+                                   hi=np.float32(3.0)), k=10)
+    tiered.query(q, IntervalFilter(dim=2, lo=np.float32(3.0),
+                                   hi=np.float32(6.0)), k=10)
+    off = dataclasses.replace(tiered.cfg, tier_prefetch=False)
+    tiered.cfg = off
+    assert tiered.maybe_prefetch() is None
+    tiered.cfg = dataclasses.replace(off, tier_prefetch=True)
+    t = tiered.maybe_prefetch()
+    if t is not None:
+        t.join(timeout=30)
+        assert not t.is_alive()
+    assert tiered.stats()["tier"]["resident_bytes"] <= budget
+
+
+# ---------------------------------------------------------------------------
+# Restore under a budget: no full resident cold-build, same answers
+# ---------------------------------------------------------------------------
+
+def test_restore_under_budget_parity(tmp_path):
+    """A budgeted replica of an unbudgeted writer's snapshot serves its
+    first query from a partially resident pack (resident <= budget, the
+    rest host-side) with bit-identical answers."""
+    base, _, budget, q = _era_managers()
+    snap = os.path.join(str(tmp_path), "snap")
+    base.snapshot_to(snap)
+    f = IntervalFilter(dim=2, lo=np.float32(6.0), hi=np.float32(9.0))
+    g0, d0 = base.query(q, f, k=10, read_path="scan")
+    cfg = StreamConfig(time_dim=2, seal_max_points=1 << 30, n_shards=2,
+                       device_budget_bytes=budget, index_cfg=IDX_CFG)
+    m2 = SegmentManager.restore(snap, cfg=cfg, resume=False)
+    g1, d1 = m2.query(q, f, k=10, read_path="scan")
+    assert np.array_equal(g0, g1)
+    assert np.array_equal(d0, d1)
+    st = m2.stats()["tier"]
+    assert st["resident_bytes"] <= budget
+    assert st["host_bytes"] > 0                   # corpus > budget: some
+    assert st["resident_bytes"] > 0               # ...but not all cold
+
+
+# ---------------------------------------------------------------------------
+# Planner: cold-bucket pricing + the query path acting on it
+# ---------------------------------------------------------------------------
+
+def test_decide_bucket_cold_pricing():
+    """Forced reads on a cold bucket never admit; auto weighs the
+    one-shot staging cost against streaming on every dispatch."""
+    c = PlannerCosts()
+    d = decide_bucket(1024, 8, 9, True, None, c, "graph", resident=False)
+    assert (d.mode, d.reason) == ("graph", "forced")
+    d = decide_bucket(1024, 8, 9, True, None, c, "scan", resident=False)
+    assert (d.mode, d.reason) == ("host_scan", "forced")
+    cheap = dataclasses.replace(c, admit_cost_per_byte=0.0,
+                                host_scan_multiplier=100.0)
+    d = decide_bucket(1024, 8, 0, False, None, cheap, "auto",
+                      resident=False, stage_bytes=1 << 20)
+    assert (d.mode, d.reason) == ("scan", "admit_cheaper")
+    dear = dataclasses.replace(c, admit_cost_per_byte=1e9)
+    d = decide_bucket(1024, 8, 0, False, None, dear, "auto",
+                      resident=False, stage_bytes=1 << 20)
+    assert (d.mode, d.reason) == ("host_scan", "cold_scan_cheaper")
+
+
+def test_estimate_graph_cost_uses_live_fill():
+    """The live-point estimate lowers the hop count vs. the padded
+    ``active_rows * cap`` bound (the exp15 crossover bugfix)."""
+    c = PlannerCosts()
+    padded = estimate_graph_cost(4096, 64, 0, c)
+    live = estimate_graph_cost(4096, 64, 0, c, n_points=1000.0)
+    assert live < padded
+
+
+def test_query_path_admits_when_planner_prices_admission():
+    """End-to-end admit_cheaper: evict a bucket, price streaming out of
+    the market, and the next auto query re-admits the block mid-query —
+    same answer, bucket resident again, admission counter moved."""
+    rng = np.random.default_rng(47)
+    mgr = SegmentManager(16, 3, StreamConfig(
+        time_dim=2, seal_max_points=1 << 30, n_shards=1,
+        device_budget_bytes=1 << 30, index_cfg=IDX_CFG))
+    x = rng.normal(size=(300, 16)).astype(np.float32)
+    mgr.ingest(x, rng.uniform(size=(300, 3)))
+    mgr.seal()
+    q = rng.normal(size=(3, 16)).astype(np.float32)
+    g0, d0 = mgr.query(q, None, k=5)
+    with mgr._lock:
+        pack = mgr._pack
+        cap = next(iter(pack.buckets))
+        assert pack.evict_bucket(cap) > 0
+    base_cfg = mgr.cfg
+
+    # leg 1: streaming priced cheap -> the bucket stays cold (host_scan),
+    # answers unchanged, and each cold dispatch counts a tier miss
+    mgr.cfg = dataclasses.replace(base_cfg, planner_costs=PlannerCosts(
+        hop_cost=1e12, admit_cost_per_byte=1e9))
+    g1, d1 = mgr.query(q, None, k=5, read_path="auto")
+    assert np.array_equal(g0, g1) and np.array_equal(d0, d1)
+    assert [p.reason for p in mgr.last_plan.values()] == \
+        ["cold_scan_cheaper"]
+    assert not mgr._pack.buckets[cap].resident
+    counters = mgr.stats()["obs"]["metrics"]["counters"]
+    assert counters.get("tier_miss_total", 0) > 0
+
+    # leg 2: staging priced free -> admit_cheaper, admission happens
+    # inside the query, and the block is resident afterwards
+    mgr.cfg = dataclasses.replace(base_cfg, planner_costs=PlannerCosts(
+        hop_cost=1e12, admit_cost_per_byte=0.0,
+        host_scan_multiplier=1e9))
+    g2, d2 = mgr.query(q, None, k=5, read_path="auto")
+    assert np.array_equal(g0, g2) and np.array_equal(d0, d2)
+    assert [p.reason for p in mgr.last_plan.values()] == ["admit_cheaper"]
+    assert mgr._pack.buckets[cap].resident
+    counters = mgr.stats()["obs"]["metrics"]["counters"]
+    assert counters.get("tier_admissions_total", 0) >= 1
+    mgr.cfg = base_cfg
+
+
+# ---------------------------------------------------------------------------
+# TierState policy unit contract
+# ---------------------------------------------------------------------------
+
+def test_tier_state_window_drift_and_policy():
+    """Window bookkeeping rejects junk, predicts by mean center drift,
+    and the heat order evicts never-touched old buckets before observed
+    ones before window-overlapping ones."""
+    ts = TierState(1000)
+    assert ts.recent_window() is None
+    assert ts.predicted_window() is None
+    ts.note_window(np.inf, np.inf)                # non-finite: ignored
+    ts.note_window(2.0, 1.0)                      # inverted: ignored
+    assert ts.recent_window() is None
+    ts.note_window(0.0, 4.0)
+    assert ts.predicted_window() == (0.0, 4.0)    # stationary: unshifted
+    ts.note_window(1.0, 5.0)
+    ts.note_window(2.0, 6.0)
+    lo, hi = ts.predicted_window()
+    assert np.isclose(lo, 3.0) and np.isclose(hi, 7.0)
+
+    def m(cap, resident, t_min, t_max, dispatches=None):
+        return {"cap": cap, "resident": resident, "nbytes": 100,
+                "t_min": t_min, "t_max": t_max,
+                "stats": None if dispatches is None
+                else {"dispatches": dispatches}}
+
+    meta = [m(256, True, 0.0, 1.0, dispatches=50),   # observed, stale span
+            m(512, True, 5.5, 8.0),                  # overlaps windows
+            m(1024, False, 6.5, 9.0),                # cold, predicted hit
+            m(2048, True, -9.0, -8.0)]               # never touched
+    assert ts.heat(meta[1]) > 1e8                    # window bonus wins
+    assert ts.heat(meta[3]) == 0.0
+    # coldest-first until enough freed: untouched-old, then observed
+    assert ts.pick_victims(meta, 150) == [2048, 256]
+    # need more than everything resident: every resident cap, cold never
+    assert set(ts.pick_victims(meta, 10 ** 6)) == {256, 512, 2048}
+    assert ts.prefetch_targets(meta) == [1024]
+
+
+# ---------------------------------------------------------------------------
+# Host-side oracles: host_reference_topk contract + host_topk tie order
+# ---------------------------------------------------------------------------
+
+def test_host_reference_topk_matches_kernel_answers():
+    """The pure-numpy oracle reproduces the fused kernel's filtered
+    top-k per bucket: identical gids (no ties in gaussian data) and
+    allclose distances — the independent check behind the cold-read
+    exactness property."""
+    rng = np.random.default_rng(9)
+    mgr = SegmentManager(24, 3, _cfg(2, None))
+    x = rng.normal(size=(200, 24)).astype(np.float32)
+    s = rng.uniform(size=(200, 3))
+    mgr.ingest(x, s)
+    mgr.seal()
+    q = rng.normal(size=(5, 24)).astype(np.float32)
+    for filt in (None, IntervalFilter(dim=2, lo=np.float32(0.3),
+                                      hi=np.float32(0.9)),
+                 make_box_filter(3, 0.7, seed=5)):
+        g, dd = mgr.query(q, filt, k=10, read_path="scan")
+        epoch, segments, _ = mgr.snapshot()
+        view = mgr.shard_pack(epoch,
+                              [s_ for s_ in segments if s_.n_live > 0])
+        gs, ds = [], []
+        for bv in view.buckets:
+            bg, bd = host_reference_topk(bv, q, filt, 10, -np.inf,
+                                         np.inf, m=3)
+            gs.append(bg)
+            ds.append(bd)
+        og, od = host_topk(np.concatenate(gs, axis=1),
+                           np.concatenate(ds, axis=1), 10)
+        assert np.array_equal(g, og), filt
+        assert np.allclose(dd, od, rtol=1e-4, atol=1e-3), filt
+
+
+def test_host_reference_topk_rejects_quantized():
+    """Quantized buckets have no single host-side distance (asymmetric
+    codes + exact rerank) — the oracle refuses instead of guessing."""
+    rng = np.random.default_rng(11)
+    mgr = SegmentManager(16, 3, _cfg(1, None, "int8"))
+    mgr.ingest(rng.normal(size=(150, 16)).astype(np.float32),
+               rng.uniform(size=(150, 3)))
+    mgr.seal()
+    q = rng.normal(size=(2, 16)).astype(np.float32)
+    mgr.query(q, None, k=5)
+    epoch, segments, _ = mgr.snapshot()
+    view = mgr.shard_pack(epoch, [s_ for s_ in segments if s_.n_live > 0])
+    with pytest.raises(ValueError, match="fp32"):
+        host_reference_topk(view.buckets[0], q, None, 5, -np.inf, np.inf)
+
+
+def test_host_topk_ambiguous_tie_reselection():
+    """A finite distance tie straddling the k-th position takes the
+    full-lexsort path: selection follows the total (dist, gid) order, not
+    argpartition's input-order accident."""
+    d = np.array([[0.1, 0.5, 0.5, 0.5, 0.9, 0.2]], np.float32)
+    g = np.array([[5, 4, 3, 2, 1, 0]], np.int64)
+    gg, dd = host_topk(g, d, 3)
+    assert gg.tolist() == [[5, 0, 2]]             # tie at 0.5 -> min gid
+    assert np.allclose(dd, [[0.1, 0.2, 0.5]])
+    # short rows pad with (-1, +inf); dead gids never surface
+    gg, dd = host_topk(np.array([[3, -1]], np.int64),
+                       np.array([[0.4, 0.1]], np.float32), 4)
+    assert gg.tolist() == [[3, -1, -1, -1]]
+    assert dd[0, 0] == np.float32(0.4) and np.isinf(dd[0, 1:]).all()
+
+
+def test_host_topk_block_order_invariance():
+    """Permuting the candidate concatenation order never changes the
+    selected (gid, dist) rows — heavy exact ties and dead entries
+    included (the merge-order half of cold-read determinism)."""
+    rng = np.random.default_rng(3)
+    d = rng.choice([0.125, 0.25, 0.5, 1.0], size=(4, 40)) \
+        .astype(np.float32)
+    g = np.broadcast_to(np.arange(40, dtype=np.int64), (4, 40)).copy()
+    g[rng.random((4, 40)) < 0.2] = -1
+    g0, d0 = host_topk(g, d, 7)
+    for _ in range(10):
+        p = rng.permutation(40)
+        g1, d1 = host_topk(g[:, p], d[:, p], 7)
+        assert np.array_equal(g0, g1)
+        assert np.array_equal(d0, d1)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=40, deadline=None)
+    @given(seed=st.integers(0, 10_000), k=st.integers(1, 12),
+           n=st.integers(1, 30))
+    def test_host_topk_order_invariance_hypothesis(seed, k, n):
+        """Hypothesis-driven permutation invariance of host_topk over
+        tie-heavy candidate rows with random dead entries."""
+        rng = np.random.default_rng(seed)
+        d = rng.choice([0.25, 0.5, 0.5, 1.0], size=(2, n)) \
+            .astype(np.float32)
+        g = np.broadcast_to(np.arange(n, dtype=np.int64), (2, n)).copy()
+        g[rng.random((2, n)) < 0.2] = -1
+        ref_g, ref_d = host_topk(g, d, k)
+        p = rng.permutation(n)
+        out_g, out_d = host_topk(g[:, p], d[:, p], k)
+        assert np.array_equal(ref_g, out_g)
+        assert np.array_equal(ref_d, out_d)
+except ImportError:                               # pragma: no cover
+    pass

@@ -52,9 +52,15 @@ def bucket_text(buckets: dict, prefix: str = "cubegraph") -> str:
 
 
 def _top_level_gauges(stats: dict, prefix: str = "cubegraph") -> str:
-    """Scalar ``stats()`` fields (liveness, pack bytes...) as gauges."""
+    """Scalar ``stats()`` fields (liveness, pack bytes...) as gauges; the
+    nested ``tier`` block (budget / resident / host bytes — present when
+    tiered storage is on) flattens to ``{prefix}_tier_*`` gauges."""
     lines = []
-    for key, value in sorted(stats.items()):
+    flat = dict(stats)
+    tier = flat.pop("tier", None)
+    if isinstance(tier, dict):
+        flat.update({f"tier_{k}": v for k, v in tier.items()})
+    for key, value in sorted(flat.items()):
         if key == "obs" or not isinstance(value, (int, float)) \
                 or isinstance(value, bool):
             continue
@@ -85,6 +91,7 @@ def _demo() -> dict:
     from repro.streaming import SegmentManager, StreamConfig
 
     cfg = StreamConfig(time_dim=2, seal_max_points=256, n_shards=2,
+                       device_budget_bytes=1 << 20,
                        index_cfg=CubeGraphConfig(n_layers=2, m_intra=8,
                                                  m_cross=4))
     rng = np.random.default_rng(0)
