@@ -1,0 +1,163 @@
+"""Exp-17: resilience — degraded-mode quality and fault-free overhead
+(``streaming/resilience.py``).
+
+Three measurements over an era'd multi-bucket corpus:
+
+  * **fault-free overhead** — median query latency with the full
+    resilience substrate active (supervisor-owned workers, a disarmed
+    ``FaultInjector`` threaded through every fault point) vs. a plain
+    manager.  The substrate on the hot path is one ``is None`` check per
+    fault point and a ``QueryResult`` wrap, so the acceptance bound is
+    < 2% (measured on min-of-samples, the noise-robust estimator).
+  * **degraded mode under cold-tier stalls** — ``delays=`` injection
+    stalls every per-bucket dispatch while a per-query deadline is set:
+    reports the degraded-query fraction and the recall of the partial
+    answers against the fault-free oracle (partial answers are real
+    answers from the buckets that made the deadline — never garbage).
+  * **compaction crash/retry** — an injected crash at
+    ``compaction.execute``: the supervisor retries, health counters
+    record the error, and post-compaction answers stay bit-for-bit.
+"""
+from __future__ import annotations
+
+import statistics
+import time
+
+import numpy as np
+
+from repro.core import CubeGraphConfig, IntervalFilter
+from repro.core.workloads import recall
+from repro.streaming import FaultInjector, SegmentManager, StreamConfig
+
+from .common import BENCH_D, BENCH_Q, csv_row, record
+
+CFG = CubeGraphConfig(n_layers=2, m_intra=8, m_cross=4)
+
+# Era'd stream (same rationale as exp16): per-era segment sizes land in
+# distinct capacity buckets, so a stalled per-bucket dispatch loop has
+# several buckets to time out between.
+_ERAS = ((6, 500), (3, 1000), (2, 2000))          # (segments, points)
+
+
+def _mgr():
+    return SegmentManager(BENCH_D, 3, StreamConfig(
+        time_dim=2, seal_max_points=1 << 30, n_shards=2, index_cfg=CFG))
+
+
+def _workload(seed=67):
+    rng = np.random.default_rng(seed)
+    n = sum(k * sz for k, sz in _ERAS)
+    x = rng.normal(size=(n, BENCH_D)).astype(np.float32)
+    s = rng.uniform(size=(n, 3))
+    s[:, 2] = np.linspace(0.0, 8.0, n)
+    q = x[rng.integers(0, n, BENCH_Q)] \
+        + 0.05 * rng.normal(size=(BENCH_Q, BENCH_D)).astype(np.float32)
+    return x, s, q
+
+
+def _ingest_eras(mgr, x, s):
+    lo = 0
+    for n_segs, size in _ERAS:
+        for _ in range(n_segs):
+            mgr.ingest(x[lo:lo + size], s[lo:lo + size])
+            mgr.seal()
+            lo += size
+
+
+def run():
+    x, s, q = _workload()
+    f = IntervalFilter(2, 0.0, 8.0)
+
+    plain = _mgr()
+    _ingest_eras(plain, x, s)
+    g_ref, _ = plain.query(q, f, k=10)
+
+    armed = _mgr()
+    _ingest_eras(armed, x, s)
+    inj = FaultInjector()
+    inj.disarm()                     # counts hits, never fires: the
+    armed.install_fault_injector(inj)  # fault-free production shape
+    g_a, _ = armed.query(q, f, k=10)
+    assert np.array_equal(g_ref, g_a)
+
+    # Interleave the two managers' reps so clock/scheduler drift during
+    # the measurement hits both sides equally — two back-to-back blocks
+    # put all the drift on one ratio leg and flake the 2% gate.
+    plain_fn = lambda: plain.query(q, f, k=10)[0]   # noqa: E731
+    armed_fn = lambda: armed.query(q, f, k=10)[0]   # noqa: E731
+    plain_fn(), armed_fn()                          # warmup (jit compile)
+    plain_lats, armed_lats = [], []
+    for _ in range(21):
+        t0 = time.perf_counter()
+        plain_fn()
+        plain_lats.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        armed_fn()
+        armed_lats.append(time.perf_counter() - t0)
+    plain_us = min(plain_lats) / BENCH_Q * 1e6
+    armed_us = min(armed_lats) / BENCH_Q * 1e6
+    overhead = armed_us / max(plain_us, 1e-9)
+    assert overhead < 1.02, f"fault-free overhead {overhead:.4f} >= 2%"
+
+    # -- degraded mode under injected cold-tier stalls ------------------
+    # every per-bucket dispatch sleeps 30 ms; a 75 ms deadline admits
+    # only the first couple of buckets, so queries return explicit
+    # partial answers
+    stall = FaultInjector(delays={"query.bucket": 0.03})
+    armed.install_fault_injector(stall)
+    degraded = 0
+    partial_recalls = []
+    n_queries = 12
+    for _ in range(n_queries):
+        res = armed.query(q, f, k=10, deadline_ms=75.0)
+        if res.degraded:
+            degraded += 1
+            partial_recalls.append(recall(res[0], g_ref))
+        else:
+            assert np.array_equal(res[0], g_ref)
+    counters = armed.obs.registry.snapshot()["counters"]
+    armed.install_fault_injector(None)
+    res_full = armed.query(q, f, k=10, deadline_ms=60_000.0)
+    assert not res_full.degraded and np.array_equal(res_full[0], g_ref)
+
+    # -- compaction crash/retry through the supervisor ------------------
+    armed.delete(np.arange(0, 800))
+    crash = FaultInjector(schedule={"compaction.execute": (1,)})
+    armed.install_fault_injector(crash)
+    armed.compact_async().join(120)
+    health = armed.stats()["health"]["compactor"]
+    assert health["errors"] >= 1 and health["runs"] >= 1, health
+    assert not health["degraded"]
+    plain.delete(np.arange(0, 800))
+    plain.compact()
+    g_pc, _ = plain.query(q, f, k=10)
+    g_ac, _ = armed.query(q, f, k=10)
+    assert np.array_equal(g_pc, g_ac)
+
+    out = {
+        "n_points": int(x.shape[0]),
+        "us_per_query": round(armed_us, 1),
+        "latency_samples": [{"us_per_query": round(dt / BENCH_Q * 1e6, 1)}
+                            for dt in armed_lats],
+        "plain_us_per_query": round(plain_us, 1),
+        "fault_free_overhead_ratio": round(overhead, 4),
+        "degraded_fraction": round(degraded / n_queries, 3),
+        "partial_recall_at_10": (round(min(partial_recalls), 4)
+                                 if partial_recalls else None),
+        "degraded_queries_total": counters.get(
+            "query_degraded_queries_total", 0),
+        "compactor_errors": health["errors"],
+        "compactor_retries": health["retries"],
+        "post_crash_compaction_exact": True,
+    }
+    csv_row("exp17/resilience", out["us_per_query"],
+            f"overhead={out['fault_free_overhead_ratio']};"
+            f"degraded_frac={out['degraded_fraction']};"
+            f"partial_recall={out['partial_recall_at_10']};"
+            f"compactor_retries={out['compactor_retries']}")
+    record("exp17_resilience", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

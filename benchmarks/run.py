@@ -41,6 +41,7 @@ SECTIONS = (
     ("exp14_observed_stats", "bench_obs", "run"),
     ("exp15_read_path_planner", "bench_planner", "run"),
     ("exp16_tiered_storage", "bench_tiering", "run"),
+    ("exp17_resilience", "bench_resilience", "run"),
     ("a5_aspect_ratio", "bench_aspect_ratio", "run"),
     ("a6_merge_strategy", "bench_merge_strategy", "run"),
     ("kernels", "bench_kernels", "run"),

@@ -510,6 +510,10 @@ class BucketedShardPack:
         self.quantize = quantize
         self.buckets: Dict[int, _Bucket] = {}
         self._entries: Dict[int, _SegEntry] = {}
+        # resilience: when the manager installs a FaultInjector it is
+        # threaded here so the admission trio's named fault points fire
+        # (streaming/resilience.py); None — the default — costs nothing
+        self.fault_hook = None
         # block shapes created since the last drain — the manager hands
         # them to kernels.ops.warm_sharded_shapes so a grown bucket's
         # dispatch is pre-traced off the query path
@@ -933,10 +937,20 @@ class BucketedShardPack:
         b.gen += 1
         return freed
 
+    def _fault(self, point: str) -> None:
+        """Fire the named fault point when an injector is attached (the
+        manager threads its ``FaultInjector`` here via
+        ``install_fault_injector``; None — the default — is free)."""
+        if self.fault_hook is not None:
+            self.fault_hook(point)
+
     def stage_admission(self, cap: int):
         """Host half of an admission: snapshot a cold bucket's host arrays
         (call under the owner's lock).  Returns ``(gen, arrays)`` or None
-        when the bucket is missing / already resident."""
+        when the bucket is missing / already resident.  Fault point
+        ``admission.stage`` fires before the snapshot — a crash here
+        mutates nothing."""
+        self._fault("admission.stage")
         b = self.buckets.get(cap)
         if b is None or b.resident:
             return None
@@ -947,7 +961,10 @@ class BucketedShardPack:
     def upload_admission(self, staged):
         """Device half of an admission: place the staged host arrays
         (lock-free — the expensive upload happens here, off the owner's
-        lock, mirroring ``compact_async``'s execute step)."""
+        lock, mirroring ``compact_async``'s execute step).  Fault point
+        ``admission.upload`` fires before the upload — a crash strands
+        nothing (the staged host copy still lives in the bucket)."""
+        self._fault("admission.upload")
         gen, arrs = staged
         return gen, {name: self._place(jnp.asarray(a))
                      for name, a in arrs.items()}
@@ -956,7 +973,10 @@ class BucketedShardPack:
         """Publish an uploaded admission iff the bucket is still cold and
         unchanged since :meth:`stage_admission` (call under the owner's
         lock).  Returns admitted device bytes; 0 means the upload went
-        stale (a delta landed mid-upload) and was discarded."""
+        stale (a delta landed mid-upload) and was discarded.  Fault point
+        ``admission.install`` fires before the gen check — a crash leaves
+        the bucket cold, consistent, and re-admittable."""
+        self._fault("admission.install")
         b = self.buckets.get(cap)
         if b is None or b.resident or b.gen != gen:
             return 0

@@ -127,6 +127,18 @@ class RetrievalRequest:
     enqueued_at: float = 0.0         # stamped by RetrievalBatcher.submit
 
 
+@dataclasses.dataclass
+class RetrievalFailure:
+    """Error result for a request whose batched retrieve raised.
+
+    ``flush()`` never drops queued requests: a chunk whose store dispatch
+    raises maps each of its requests to one of these (instead of a document
+    list) while every other chunk drains normally.
+    """
+    req_id: int
+    error: str
+
+
 def _filter_key(filt: Filter, k: int):
     """Hashable identity for grouping: pytree structure + parameter bytes."""
     leaves, treedef = jax.tree_util.tree_flatten(filt)
@@ -172,7 +184,14 @@ class RetrievalBatcher:
         return len(self.queue)
 
     def flush(self) -> Dict[int, list]:
-        """Drain the queue; returns {req_id: [Document, ...]}."""
+        """Drain the queue; returns {req_id: [Document, ...]}.
+
+        Every queued request gets an entry: a chunk whose store dispatch
+        raises maps each of its requests to a :class:`RetrievalFailure`
+        (counted in ``retrieval_failed_total``) and the remaining chunks
+        keep draining — one bad filter or a poisoned store cannot black-hole
+        the rest of the queue.
+        """
         groups: Dict[object, List[RetrievalRequest]] = {}
         while self.queue:
             req = self.queue.popleft()
@@ -192,8 +211,16 @@ class RetrievalBatcher:
                     if r.enqueued_at:
                         wait_hist.observe((t_flush - r.enqueued_at) * 1e3)
                 q = np.stack([r.query_emb for r in chunk]).astype(np.float32)
-                rows = self.store.retrieve(q, chunk[0].filt, k=chunk[0].k,
-                                           ef=self.ef)
+                try:
+                    rows = self.store.retrieve(q, chunk[0].filt,
+                                               k=chunk[0].k, ef=self.ef)
+                except Exception as exc:       # noqa: BLE001 — isolate chunk
+                    self.metrics.counter("retrieval_failed_total").inc(
+                        len(chunk))
+                    for r in chunk:
+                        results[r.req_id] = RetrievalFailure(
+                            r.req_id, f"{type(exc).__name__}: {exc}")
+                    continue
                 for r, docs in zip(chunk, rows):
                     results[r.req_id] = docs
         self._flushes += 1

@@ -12,11 +12,17 @@
 - ``persistence``  durability: CRC-framed write-ahead log, immutable
                 per-segment artifacts, atomic versioned manifest, and the
                 crash-consistent restore path (``SegmentManager.restore``)
+- ``resilience``  fault injection (deterministic ``FaultInjector``),
+                supervised background workers (``Supervisor`` with retry /
+                backoff / error budget), and query deadlines (``Deadline``,
+                ``QueryResult`` with explicit ``degraded`` marking)
 """
 from .manager import CompactionPlan, SegmentManager, StreamConfig
 from .persistence import (RestoreError, StreamPersistence, WriteAheadLog,
                           load_manifest, restore_manager)
 from .query import merge_topk, query_segments, temporal_bounds
+from .resilience import (FAULT_POINTS, Deadline, FaultError, FaultInjector,
+                         QueryResult, Supervisor)
 from .segments import (DeltaBuffer, DeltaSnapshot, PointStore, SealedSegment,
                        SegmentQueryStats)
 
@@ -27,4 +33,6 @@ __all__ = [
     "merge_topk", "query_segments", "temporal_bounds",
     "RestoreError", "StreamPersistence", "WriteAheadLog",
     "load_manifest", "restore_manager",
+    "FAULT_POINTS", "Deadline", "FaultError", "FaultInjector",
+    "QueryResult", "Supervisor",
 ]

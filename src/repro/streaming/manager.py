@@ -132,6 +132,16 @@ class StreamConfig:
     # hits shared no-op singletons (no allocations, no locks).  Per-query
     # tracing is separately opt-in via query(..., return_trace=True).
     obs_enabled: bool = True
+    # Query deadline (streaming/resilience.py): with a budget set, every
+    # query checks remaining time between bucket dispatches (cold-tier
+    # host streams and graph traversals included) and on overrun returns
+    # the partial result from already-answered buckets explicitly marked
+    # ``degraded=True`` (per-reason skip counters in
+    # ``query_degraded_total{reason=...}``); the planner additionally
+    # refuses host_scan/admit_cheaper decisions the remaining budget
+    # can't cover.  ``None`` (default) keeps the unbounded exact path —
+    # zero clock reads added.  Per-call override: query(deadline_ms=).
+    query_deadline_ms: Optional[float] = None
     store_chunk: int = 4096               # PointStore GC granularity (rows)
     # Durability (repro.streaming.persistence): with ``persist_dir`` set the
     # manager WAL-logs every ingest/delete/GC and checkpoints (segment
@@ -236,6 +246,15 @@ class SegmentManager:
                          "store_gc_points": 0}
         from ..obs import StreamObs
         self.obs = StreamObs(enabled=cfg.obs_enabled)
+        # Resilience (streaming/resilience.py): the Supervisor owns every
+        # background worker (compactor / prefetcher / checkpointer) with
+        # bounded retry + error budget; fault_injector is None in
+        # production and a FaultInjector under test/chaos harnesses —
+        # install_fault_injector threads it through the WAL, checkpoint,
+        # pack-admission, and lifecycle fault points.
+        from .resilience import Supervisor
+        self.supervisor = Supervisor(registry=self.obs.registry)
+        self.fault_injector = None
         # Tiered storage: TierState owns the budget + query-window drift
         # history; the manager serializes every evict/admit under _lock.
         self.tier = None
@@ -259,6 +278,49 @@ class SegmentManager:
             # publish an (empty) manifest immediately so the directory is
             # restorable even if we crash before the first seal
             self.persist.checkpoint(self)
+
+    # ------------------------------------------------------------------
+    # Resilience: fault points + supervised workers
+    # ------------------------------------------------------------------
+    def _fault(self, point: str) -> None:
+        """Fire one named fault point when an injector is installed (the
+        production path is a single None check)."""
+        inj = self.fault_injector
+        if inj is not None:
+            inj(point)
+
+    def install_fault_injector(self, inj) -> None:
+        """Thread a :class:`~.resilience.FaultInjector` (or None to
+        uninstall) through every fault point this manager owns: the WAL
+        (``wal.append`` / ``wal.fsync``), checkpoint artifacts
+        (``segment.write`` / ``manifest.rename``), the pack's admission
+        trio, and the lifecycle points (``pack.delta`` /
+        ``prefetch.round`` / ``compaction.execute`` / ``query.bucket``).
+        One injector instance sees every point, so a seed-driven schedule
+        interleaves faults across subsystems deterministically."""
+        with self._lock:
+            self.fault_injector = inj
+            if self._pack is not None:
+                self._pack.fault_hook = inj
+            if self.persist is not None:
+                self.persist.fault_hook = inj
+                if self.persist.wal is not None:
+                    self.persist.wal.fault_hook = inj
+
+    def checkpoint_async(self) -> Optional[threading.Thread]:
+        """Run a durable checkpoint on the supervised ``checkpointer``
+        daemon worker (at most one alive) — the deferred-checkpoint path
+        for callers that want durability without blocking the write path.
+        A failing checkpoint is retried with backoff and lands in
+        ``stats()["health"]`` instead of dying with the thread.  Returns
+        the thread, or None without persistence attached."""
+        if self.persist is None:
+            return None
+
+        def _ckpt():
+            with self._lock:
+                self.persist.checkpoint(self)
+        return self.supervisor.spawn("checkpointer", _ckpt)
 
     # ------------------------------------------------------------------
     # Liveness ledger / point store
@@ -495,6 +557,8 @@ class SegmentManager:
             return
         try:
             pack.metrics = self.obs.registry
+            pack.fault_hook = self.fault_injector
+            self._fault("pack.delta")
             for seg in removed:
                 pack.remove_segment(seg.seg_id)
             for seg in added:
@@ -504,7 +568,11 @@ class SegmentManager:
             pack.epoch = self.epoch
             self._update_pack_gauges(pack)
             self._tier_enforce(pack)
-        except Exception:                 # pragma: no cover - defensive
+        except Exception as exc:
+            # correctness first: invalidate so the next sharded query
+            # cold-builds an exact pack — but never silently (this was
+            # a bare swallow before PR 9)
+            self.supervisor.note_error("pack_delta", exc)
             self._pack = None
 
     def _update_pack_gauges(self, pack) -> None:
@@ -631,10 +699,11 @@ class SegmentManager:
 
     def maybe_prefetch(self) -> Optional[threading.Thread]:
         """Stage cold buckets the predicted next query window will touch,
-        on a daemon thread (at most one alive — the compact_async
-        discipline).  The query path calls this after each sharded
-        dispatch; returns the thread, or None when there is nothing to
-        prefetch."""
+        on a supervised daemon thread (at most one alive — the
+        compact_async discipline; failures are retried and recorded in
+        ``stats()["health"]``).  The query path calls this after each
+        sharded dispatch; returns the thread, or None when there is
+        nothing to prefetch."""
         if self.tier is None or not self.cfg.tier_prefetch:
             return None
         with self._lock:
@@ -643,13 +712,10 @@ class SegmentManager:
                 return None
             if not self.tier.prefetch_targets(self._bucket_meta(pack)):
                 return None
-            t = self._prefetch_thread
-            if t is not None and t.is_alive():
-                return t
-            t = threading.Thread(target=self._prefetch_once, daemon=True,
-                                 name="cubegraph-prefetcher")
-            self._prefetch_thread = t
-        t.start()
+        # supervised: a crashing prefetch round is retried with backoff
+        # and recorded in stats()["health"] — never a silent daemon death
+        t = self.supervisor.spawn("prefetcher", self._prefetch_once)
+        self._prefetch_thread = t
         return t
 
     def _prefetch_once(self) -> int:
@@ -658,7 +724,10 @@ class SegmentManager:
         the lock only if the pack and the bucket's mutation generation
         are unchanged (a delta that landed mid-upload silently discards
         the stale upload — the bucket stays cold and correct).  Returns
-        buckets admitted."""
+        buckets admitted.  Fault point ``prefetch.round`` fires at entry
+        (the supervised worker retries a crashed round; prefetch is
+        residency-only, so a crash at any stage changes no answers)."""
+        self._fault("prefetch.round")
         with self._lock:
             pack = self._pack
             if (self.tier is None or pack is None
@@ -779,7 +848,11 @@ class SegmentManager:
         ingest/query path).  With persistence attached the replacements'
         durable artifacts are also staged here, lock-free, so the publish
         checkpoint under the lock only swaps state + manifest.  Returns
-        ``(victims, replacement)`` pairs."""
+        ``(victims, replacement)`` pairs.  Fault point
+        ``compaction.execute`` fires before any rebuild — a crash here
+        mutates nothing (the plan is re-derivable from unchanged
+        state)."""
+        self._fault("compaction.execute")
         t0 = time.perf_counter()
         built: List[Tuple[List[SealedSegment], Optional[SealedSegment]]] = []
         for seg in plan.gc:
@@ -862,17 +935,16 @@ class SegmentManager:
         return total
 
     def compact_async(self) -> threading.Thread:
-        """Run :meth:`compact` on a daemon thread (at most one at a time);
-        returns the thread.  Queries and ingest proceed concurrently — the
-        publish step is the only part that takes the lock."""
-        with self._lock:
-            t = self._compact_thread
-            if t is not None and t.is_alive():
-                return t
-            t = threading.Thread(target=self.compact, daemon=True,
-                                 name="cubegraph-compactor")
-            self._compact_thread = t
-        t.start()
+        """Run :meth:`compact` on a supervised daemon thread (at most one
+        at a time); returns the thread.  Queries and ingest proceed
+        concurrently — the publish step is the only part that takes the
+        lock.  A compaction that raises is retried with bounded backoff
+        by the :class:`~.resilience.Supervisor`; persistent failure trips
+        the ``compactor`` worker's degraded flag in ``stats()["health"]``
+        (the work is deferred, never silently lost — the next tick
+        re-plans from unchanged state)."""
+        t = self.supervisor.spawn("compactor", self.compact)
+        self._compact_thread = t
         return t
 
     def wait_for_compaction(self, timeout: Optional[float] = None) -> None:
@@ -1032,6 +1104,7 @@ class SegmentManager:
                                     mesh=self.shard_mesh)
         with self._lock:
             pack.sync_alive(self.alive)
+            pack.fault_hook = self.fault_injector
             if self.epoch == epoch:
                 self._pack = pack
                 if self.tier is not None and hasattr(pack, "admit_bucket"):
@@ -1050,16 +1123,28 @@ class SegmentManager:
         tree decomposing this call's latency (delta scan, per-bucket
         dispatch, rerank, merge) with every timer stopped only after
         ``jax.block_until_ready``.  Tracing never changes results (see
-        ``tests/test_obs.py``)."""
+        ``tests/test_obs.py``).
+
+        ``deadline_ms`` (forwarded via ``**kw``, default
+        ``StreamConfig.query_deadline_ms``) bounds this call's time
+        budget; on overrun the returned
+        :class:`~.resilience.QueryResult` carries ``degraded=True`` with
+        the partial answer from already-dispatched buckets — see
+        ``streaming/resilience.py``."""
         from .query import query_segments
         if not return_trace:
             return query_segments(self, queries, filt, k=k, ef=ef,
                                   return_stats=return_stats, **kw)
         from ..obs.trace import QueryTrace
+        from .resilience import QueryResult
         trace = QueryTrace("query")
         out = query_segments(self, queries, filt, k=k, ef=ef,
                              return_stats=return_stats, trace=trace, **kw)
-        return out + (trace.finish(),)
+        res = out + (trace.finish(),)
+        if isinstance(out, QueryResult):     # keep degraded metadata:
+            res = QueryResult(res, degraded=out.degraded,   # tuple concat
+                              reasons=out.reasons)          # strips it
+        return res
 
     def stats(self) -> dict:
         """Lifecycle counters, per-segment occupancy, and the ``obs``
@@ -1092,6 +1177,10 @@ class SegmentManager:
                 }),
                 "store_resident_points": self.store.resident_points,
                 "store_nbytes": self.store.nbytes,
+                # per-worker supervisor snapshot (runs / errors / retries /
+                # restarts / degraded / last_error) — the machine-readable
+                # twin of worker_errors_total{worker=} and friends
+                "health": self.supervisor.health(),
                 "obs": self.obs.snapshot(),
                 **self.counters,
             })

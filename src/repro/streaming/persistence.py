@@ -184,6 +184,7 @@ class WriteAheadLog:
         body = bytes([rec_type]) + payload
         frame = _FRAME.pack(len(body), zlib.crc32(body)) + body
         start = self._f.tell()
+        since0 = self._since_sync
         t0 = time.perf_counter()
         try:
             if self.fault_hook is not None:
@@ -193,16 +194,23 @@ class WriteAheadLog:
                 self._f.write(frame[mid:])
             else:
                 self._f.write(frame)
+            self._since_sync += 1
+            # the batched fsync is part of this append's failure atom: if
+            # it raises (ENOSPC at sync time, a "wal.fsync" fault), the
+            # un-acknowledged record is rolled back too — otherwise the
+            # caller aborts its mutation while the record survives replay,
+            # and the *next* logged ingest would no longer extend the
+            # store (phantom-point RestoreError on recovery)
+            if self._since_sync >= self.fsync_every:
+                self.sync()
         except BaseException:
+            self._since_sync = since0
             try:
                 self._f.truncate(start)
                 self._f.seek(start)
             except OSError:              # pragma: no cover - disk gone
                 pass
             raise
-        self._since_sync += 1
-        if self._since_sync >= self.fsync_every:
-            self.sync()
         # the append histogram includes the batched fsync when this record
         # hit the batch boundary — that is the latency an acknowledged
         # ingest actually pays, which is what the histogram is for
@@ -211,8 +219,13 @@ class WriteAheadLog:
         return self._f.tell()
 
     def sync(self) -> None:
-        """fsync pending appends (batch boundary)."""
+        """fsync pending appends (batch boundary).  Named fault point
+        ``wal.fsync`` fires just before the flush — a raise here, reached
+        through :meth:`append`, rolls the triggering record back (see the
+        failure-atomicity note there)."""
         t0 = time.perf_counter()
+        if self.fault_hook is not None:
+            self.fault_hook("wal.fsync")
         self._f.flush()
         os.fsync(self._f.fileno())
         self._since_sync = 0

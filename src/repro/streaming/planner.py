@@ -81,6 +81,13 @@ class PlannerCosts:
     admit_cost_per_byte: float = 0.05   # one-shot staging cost of admitting
                                         # a cold bucket block, in
                                         # row-equivalents per byte uploaded
+    cost_per_ms: float = 250_000.0      # row-equivalents the rig retires
+                                        # per millisecond — converts a
+                                        # query deadline's remaining ms
+                                        # into a cost ceiling for the
+                                        # deadline gate (placeholder like
+                                        # everything above; ROADMAP item 5
+                                        # calibrates it from rooflines)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,6 +96,9 @@ class PlanDecision:
 
     cap: int
     mode: str                           # "scan" | "graph" | "host_scan"
+                                        # | "skip" (deadline refusal — the
+                                        # bucket is not dispatched and the
+                                        # query reports degraded=True)
     est_scan: float                     # resident-scan estimate (host_scan
                                         # decisions price est_scan *
                                         # host_scan_multiplier on top)
@@ -135,7 +145,8 @@ def decide_bucket(cap: int, active_rows: int, n_seeds: int,
                   graph_ready: bool, stats: Optional[Dict],
                   costs: PlannerCosts, read_path: str = "auto",
                   resident: bool = True, stage_bytes: int = 0,
-                  n_points: Optional[float] = None) -> PlanDecision:
+                  n_points: Optional[float] = None,
+                  deadline_cost: Optional[float] = None) -> PlanDecision:
     """Pick scan vs. graph vs. host_scan for one bucket dispatch.
 
     ``stats`` is this bucket's entry from a ``BucketStats`` snapshot (or
@@ -151,28 +162,52 @@ def decide_bucket(cap: int, active_rows: int, n_seeds: int,
     ``admit_cheaper`` — the query path performs the admission).
     ``n_points`` is the live-fill estimate forwarded to
     :func:`estimate_graph_cost`.
+
+    ``deadline_cost`` (remaining query-deadline ms converted to cost
+    units via ``PlannerCosts.cost_per_ms``) gates the *cold* modes: the
+    planner refuses ``host_scan`` / ``admit_cheaper`` whose priced cost
+    the remaining deadline cannot cover, picking whichever cold route
+    still fits, or mode ``"skip"`` (reason ``"deadline"``) when neither
+    does — the query then omits the bucket and reports an explicitly
+    degraded result instead of blowing the budget on a host stream.
+    Resident buckets are never skipped here; the query path's
+    between-dispatch deadline checks bound those.
     """
     est_scan = estimate_scan_cost(cap, active_rows, costs)
     est_graph = estimate_graph_cost(cap, active_rows, n_seeds, costs,
                                     n_points=n_points)
     can_graph = graph_ready and n_seeds > 0
+
+    def _fits(cost: float) -> bool:
+        return deadline_cost is None or cost <= deadline_cost
+
     if not resident:
         est_host = est_scan * costs.host_scan_multiplier
         stage = float(stage_bytes) * costs.admit_cost_per_byte
         if read_path == "graph" and can_graph:
             return PlanDecision(cap, "graph", est_scan, est_graph, "forced")
         if read_path == "scan":
+            if not _fits(est_host):
+                return PlanDecision(cap, "skip", est_scan, est_graph,
+                                    "deadline")
             return PlanDecision(cap, "host_scan", est_scan, est_graph,
                                 "forced")
         best, mode = est_scan, "scan"
         if can_graph and _graph_guard(cap, active_rows, stats, costs) \
                 is None and est_graph < est_scan:
             best, mode = est_graph, "graph"
-        if stage + best < est_host:
+        if stage + best < est_host and _fits(stage + best):
             return PlanDecision(cap, mode, est_scan, est_graph,
                                 "admit_cheaper")
-        return PlanDecision(cap, "host_scan", est_scan, est_graph,
-                            "cold_scan_cheaper")
+        if _fits(est_host):
+            return PlanDecision(cap, "host_scan", est_scan, est_graph,
+                                "cold_scan_cheaper")
+        if _fits(stage + best):
+            # the stream is too slow for what's left of the deadline but
+            # a one-shot admission still fits — admit and run resident
+            return PlanDecision(cap, mode, est_scan, est_graph,
+                                "admit_cheaper")
+        return PlanDecision(cap, "skip", est_scan, est_graph, "deadline")
     if not can_graph:
         return PlanDecision(cap, "scan", est_scan, est_graph, "graph_unready")
     if read_path == "scan":
@@ -190,14 +225,18 @@ def decide_bucket(cap: int, active_rows: int, n_seeds: int,
 
 def plan_read_paths(view, read_path: str, stats_snapshot: Dict,
                     costs: PlannerCosts, t_lo: float, t_hi: float,
-                    graph_allowed: bool = True) -> Dict[int, PlanDecision]:
+                    graph_allowed: bool = True,
+                    deadline_cost: Optional[float] = None
+                    ) -> Dict[int, PlanDecision]:
     """Plan every bucket of a :class:`~..distributed.segment_shards.PackView`.
 
     ``stats_snapshot`` is ``BucketStats.snapshot()`` (keys are ``str(cap)``);
     ``graph_allowed=False`` (e.g. the filter has no kernel encoding, so the
     traversal kernel cannot evaluate φ) forces scan everywhere.  Buckets
     whose rows are all temporally pruned are skipped — no dispatch happens
-    for them in either mode.
+    for them in either mode.  ``deadline_cost`` threads the query's
+    remaining deadline (in cost units) into every
+    :func:`decide_bucket` call — see the deadline gate there.
     """
     from ..distributed.segment_shards import bucket_graph_seeds
     plan: Dict[int, PlanDecision] = {}
@@ -210,10 +249,17 @@ def plan_read_paths(view, read_path: str, stats_snapshot: Dict,
         fill = getattr(bv, "fill", None)
         n_points = None if fill is None else float(fill[active].sum())
         if not graph_allowed:
+            est = estimate_scan_cost(bv.cap, n_active, costs)
+            if resident:
+                mode = "scan"
+            elif deadline_cost is not None \
+                    and est * costs.host_scan_multiplier > deadline_cost:
+                mode = "skip"             # deadline gate, forced-scan cold
+            else:
+                mode = "host_scan"
             plan[bv.cap] = PlanDecision(
-                bv.cap, "scan" if resident else "host_scan",
-                estimate_scan_cost(bv.cap, n_active, costs),
-                float("inf"), "filter_not_encodable")
+                bv.cap, mode, est, float("inf"),
+                "deadline" if mode == "skip" else "filter_not_encodable")
             continue
         seeds = bucket_graph_seeds(bv, t_lo, t_hi)
         plan[bv.cap] = decide_bucket(bv.cap, n_active, len(seeds),
@@ -222,5 +268,6 @@ def plan_read_paths(view, read_path: str, stats_snapshot: Dict,
                                      costs, read_path, resident=resident,
                                      stage_bytes=getattr(bv, "stage_bytes",
                                                          0),
-                                     n_points=n_points)
+                                     n_points=n_points,
+                                     deadline_cost=deadline_cost)
     return plan

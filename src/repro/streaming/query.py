@@ -48,6 +48,7 @@ import numpy as np
 from ..core import Filter
 from ..obs.metrics import NULL_REGISTRY
 from ..obs.trace import NULL_TRACE, block_ready
+from .resilience import Deadline, QueryResult
 from .segments import SegmentQueryStats
 
 __all__ = ["merge_topk", "temporal_bounds", "query_segments"]
@@ -96,7 +97,8 @@ def _alive_filter(manager, gids: np.ndarray, dists: np.ndarray
     return gids, dists
 
 
-def _plan_pack(manager, pack, filt, rp, t_lo, t_hi, obs, registry):
+def _plan_pack(manager, pack, filt, rp, t_lo, t_hi, obs, registry,
+               deadline=None):
     """Run the cost planner over one ``PackView`` dispatch.
 
     Returns ``(plan, graph_caps)`` where ``graph_caps`` is the set of bucket
@@ -104,6 +106,12 @@ def _plan_pack(manager, pack, filt, rp, t_lo, t_hi, obs, registry):
     the plan on ``manager.last_plan`` and bumps the
     ``planner_decision_total{mode=...}`` counters — one increment per bucket
     decision, labelled like the pack gauges in ``obs/metrics.py``.
+
+    With a running ``deadline`` the remaining budget (converted to cost
+    units via ``PlannerCosts.cost_per_ms``) gates the cold modes: the
+    planner refuses ``host_scan``/``admit_cheaper`` decisions the budget
+    can't cover (mode ``"skip"`` — the caller omits those buckets and
+    marks the result degraded).
     """
     from ..kernels.ops import encode_filter
     from .planner import PlannerCosts, plan_read_paths
@@ -114,8 +122,11 @@ def _plan_pack(manager, pack, filt, rp, t_lo, t_hi, obs, registry):
     # everywhere; the traversal kernel shares the same φ encoding, so it
     # is equally unavailable — force scan across the whole pack
     graph_ok = encode_filter(filt, pack.m) is not None
+    deadline_cost = (None if deadline is None else
+                     max(deadline.remaining_ms(), 0.0) * costs.cost_per_ms)
     plan = plan_read_paths(pack, rp, snap, costs, t_lo, t_hi,
-                           graph_allowed=graph_ok)
+                           graph_allowed=graph_ok,
+                           deadline_cost=deadline_cost)
     manager.last_plan = plan
     for dec in plan.values():
         registry.counter(
@@ -127,7 +138,8 @@ def _plan_pack(manager, pack, filt, rp, t_lo, t_hi, obs, registry):
 
 def _graph_search_blocks(manager, pack, buckets, queries, filt, k,
                          t_lo, t_hi, metric, trace, registry,
-                         observe=None, on_cold=None):
+                         observe=None, on_cold=None, deadline=None,
+                         degrade=None):
     """Stitched-traversal dispatch for the buckets the planner sent to
     ``graph`` mode.
 
@@ -141,6 +153,11 @@ def _graph_search_blocks(manager, pack, buckets, queries, filt, k,
     fallback dispatch still feeds ``BucketStats`` (and therefore the
     planner) instead of silently starving it.  Returns
     ``(blocks_g, blocks_d)`` lists.
+
+    With a running ``deadline``, the remaining budget is checked before
+    each bucket's traversal; once spent, the remaining buckets are
+    skipped and reported through ``degrade("deadline_graph", n)`` — the
+    caller marks the result degraded.
     """
     import dataclasses as _dc
 
@@ -153,7 +170,11 @@ def _graph_search_blocks(manager, pack, buckets, queries, filt, k,
     blocks_g: List[np.ndarray] = []
     blocks_d: List[np.ndarray] = []
     cand_g: List[np.ndarray] = []
-    for bv in buckets:
+    for i, bv in enumerate(buckets):
+        if deadline is not None and deadline.expired():
+            if degrade is not None:
+                degrade("deadline_graph", len(buckets) - i)
+            break
         seeds = bucket_graph_seeds(bv, t_lo, t_hi)
         with trace.span("bucket_graph", cap=bv.cap, seeds=int(len(seeds))):
             out = bucket_graph_topk(
@@ -202,6 +223,7 @@ def query_segments(manager, queries: np.ndarray, filt: Optional[Filter],
                    k: int = 10, ef: int = 64, return_stats: bool = False,
                    use_shards: Optional[bool] = None, trace=None,
                    read_path: Optional[str] = None,
+                   deadline_ms: Optional[float] = None,
                    **search_kw):
     """Fan out one query batch across all live segments and merge top-k.
 
@@ -229,6 +251,20 @@ def query_segments(manager, queries: np.ndarray, filt: Optional[Filter],
     one span per phase — delta scan, per-bucket dispatch, rerank, merge —
     and the manager's :class:`~repro.obs.metrics.BucketStats` accumulator
     receives one per-bucket observation per sharded query.
+
+    ``deadline_ms`` (default ``StreamConfig.query_deadline_ms``; None =
+    unbounded) starts a :class:`~.resilience.Deadline` for this call.
+    The remaining budget is checked *between* bucket dispatches — sealed
+    scans (resident and cold host streams alike), graph traversals, and
+    the per-segment fan-out — never mid-kernel; once spent, the
+    remaining buckets are skipped and the merged partial result is
+    returned as a :class:`~.resilience.QueryResult` with
+    ``degraded=True`` and per-reason skip counts (also counted in
+    ``query_degraded_total{reason=...}``).  The delta buffer is always
+    scanned (freshest data, one cheap exact dispatch), and the planner
+    refuses cold decisions the budget can't cover (see
+    ``streaming/planner.py``).  Without a deadline the path is
+    unchanged: results are exact and ``degraded`` is always False.
     """
     t_all = time.perf_counter()
     queries = np.atleast_2d(np.asarray(queries, np.float32))
@@ -236,6 +272,15 @@ def query_segments(manager, queries: np.ndarray, filt: Optional[Filter],
     trace = NULL_TRACE if trace is None else trace
     obs = getattr(manager, "obs", None)
     registry = obs.registry if obs is not None else NULL_REGISTRY
+    if deadline_ms is None:
+        deadline_ms = manager.cfg.query_deadline_ms
+    deadline = Deadline.start(deadline_ms)
+    reasons: dict = {}
+
+    def _degrade(reason: str, n: int = 1) -> None:
+        reasons[reason] = reasons.get(reason, 0) + int(n)
+        registry.counter(
+            f'query_degraded_total{{reason="{reason}"}}').inc(n)
     observe = (obs.bucket_stats.observe
                if obs is not None and obs.bucket_stats is not None else None)
     t_lo, t_hi = temporal_bounds(filt, manager.time_dim)
@@ -295,7 +340,15 @@ def query_segments(manager, queries: np.ndarray, filt: Optional[Filter],
             if isinstance(pack, PackView) and rp != "scan":
                 import dataclasses as _dc
                 plan, graph_caps = _plan_pack(manager, pack, filt, rp,
-                                              t_lo, t_hi, obs, registry)
+                                              t_lo, t_hi, obs, registry,
+                                              deadline=deadline)
+                # deadline-refused buckets (mode "skip"): the planner
+                # priced every cold route above the remaining budget —
+                # omit them and answer degraded instead of stalling
+                skip_caps = frozenset(c for c, dec in plan.items()
+                                      if dec.mode == "skip")
+                if skip_caps:
+                    _degrade("deadline_planner", len(skip_caps))
                 if tier is not None:
                     # the planner priced re-admission below streaming for
                     # these cold buckets: admit them now and dispatch the
@@ -315,17 +368,52 @@ def query_segments(manager, queries: np.ndarray, filt: Optional[Filter],
                             pack, buckets=tuple(admitted.get(bv.cap, bv)
                                                 for bv in pack.buckets))
                         scan_pack = pack
-                if graph_caps:
+                drop = graph_caps | skip_caps
+                if drop:
                     graph_bvs = tuple(bv for bv in pack.buckets
                                       if bv.cap in graph_caps)
                     scan_pack = _dc.replace(
                         pack, buckets=tuple(bv for bv in pack.buckets
-                                            if bv.cap not in graph_caps))
+                                            if bv.cap not in drop))
             with trace.span("sealed_scan",
                             quantized=getattr(pack, "quantize", None)
                             is not None):
                 t0 = time.perf_counter()
-                if isinstance(pack, PackView) and pack.quantize is not None:
+                if isinstance(pack, PackView) and deadline is not None:
+                    # deadline-aware dispatch: one sub-view per bucket so
+                    # the remaining budget is re-checked between bucket
+                    # dispatches.  Per-bucket rerank-to-k blocks merge to
+                    # the same exact (dist, gid) answer as the bulk union
+                    # rerank — top-k of a union equals the merge of exact
+                    # per-part top-ks under the shared tiebreak — so a
+                    # query that finishes in time is bit-for-bit the
+                    # no-deadline answer.
+                    import dataclasses as _dc
+                    bvs = scan_pack.buckets
+                    for i, bv in enumerate(bvs):
+                        if deadline.expired():
+                            _degrade("deadline_sealed_scan", len(bvs) - i)
+                            break
+                        manager._fault("query.bucket")
+                        sub = _dc.replace(scan_pack, buckets=(bv,))
+                        if scan_pack.quantize is not None:
+                            gg, dd = pack_search(
+                                sub, queries, filt, k, t_lo=t_lo,
+                                t_hi=t_hi, metric=metric,
+                                lookup=manager.get_points,
+                                rerank_multiple=manager.cfg.rerank_multiple,
+                                trace=trace, observe=observe,
+                                on_cold=on_cold)
+                            blocks_g.append(gg)
+                            blocks_d.append(dd)
+                        else:
+                            for gg, dd in pack_search_blocks(
+                                    sub, queries, filt, k, t_lo=t_lo,
+                                    t_hi=t_hi, metric=metric, trace=trace,
+                                    observe=observe, on_cold=on_cold):
+                                blocks_g.append(gg)
+                                blocks_d.append(dd)
+                elif isinstance(pack, PackView) and pack.quantize is not None:
                     # two-stage quantized read path: pack_search
                     # over-fetches rerank_multiple * k candidates from
                     # each unpruned bucket's int8 asymmetric-distance
@@ -362,7 +450,8 @@ def query_segments(manager, queries: np.ndarray, filt: Optional[Filter],
                     gb_g, gb_d = _graph_search_blocks(
                         manager, pack, graph_bvs, queries, filt, k,
                         t_lo, t_hi, metric, trace, registry,
-                        observe=observe, on_cold=on_cold)
+                        observe=observe, on_cold=on_cold,
+                        deadline=deadline, degrade=_degrade)
                     blocks_g.extend(gb_g)
                     blocks_d.extend(gb_d)
                 # the per-bucket spans above already blocked on their own
@@ -390,6 +479,13 @@ def query_segments(manager, queries: np.ndarray, filt: Optional[Filter],
                 st.pruned = True
                 stats.append(st)
                 continue
+            if deadline is not None and deadline.expired():
+                # budget spent: report the segment unsearched (pruned
+                # with zero search time) and mark the answer degraded
+                _degrade("deadline_segment")
+                st.pruned = True
+                stats.append(st)
+                continue
             with trace.span("segment_scan", seg_id=seg.seg_id,
                             rows=seg.n_live):
                 t0 = time.perf_counter()
@@ -402,16 +498,20 @@ def query_segments(manager, queries: np.ndarray, filt: Optional[Filter],
 
     registry.counter("query_batches_total").inc()
     registry.counter("query_rows_total").inc(b)
+    if reasons:
+        registry.counter("query_degraded_queries_total").inc()
     if not blocks_g:
         out_g = np.full((b, k), -1, np.int64)
         out_d = np.full((b, k), np.inf, np.float32)
         registry.histogram("query_ms").observe(
             (time.perf_counter() - t_all) * 1e3)
-        return (out_g, out_d, stats) if return_stats else (out_g, out_d)
+        out = (out_g, out_d, stats) if return_stats else (out_g, out_d)
+        return QueryResult(out, degraded=bool(reasons), reasons=reasons)
 
     with trace.span("merge", blocks=len(blocks_g)):
         out_g, out_d = merge_topk(blocks_g, blocks_d, k)
         out_g, out_d = _alive_filter(manager, out_g, out_d)
     registry.histogram("query_ms").observe(
         (time.perf_counter() - t_all) * 1e3)
-    return (out_g, out_d, stats) if return_stats else (out_g, out_d)
+    out = (out_g, out_d, stats) if return_stats else (out_g, out_d)
+    return QueryResult(out, degraded=bool(reasons), reasons=reasons)

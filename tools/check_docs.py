@@ -31,6 +31,7 @@ LINT_DIRS = ("src/repro/streaming", "src/repro/distributed",
 REQUIRED_LINTED = ("src/repro/streaming/persistence.py",
                    "src/repro/streaming/manager.py",
                    "src/repro/streaming/planner.py",
+                   "src/repro/streaming/resilience.py",
                    "src/repro/streaming/tiering.py",
                    "src/repro/distributed/segment_shards.py",
                    "src/repro/quant/codec.py",
