@@ -1,0 +1,114 @@
+"""exp18 — multi-tenant serving tier under geo-temporal traffic.
+
+Runs the :mod:`repro.serving.workload` harness (moving time windows,
+Zipf-skewed hot regions, ingest bursts mid-query, per-request SLOs) over
+a shared :class:`~repro.serving.tenancy.MultiTenantStore` and reports,
+per the PR-10 acceptance contract:
+
+* recall@10 of non-degraded answers vs a numpy brute-force per-tenant
+  oracle (the exact scan path must hold >= 0.95 — asserted),
+* p50/p99 request latency plus SLO-violation / degraded / rejected
+  fractions,
+* the bit-for-bit tenant-isolation check (shared-substrate answers ==
+  dedicated single-tenant oracle stores — asserted),
+* ``latency_samples`` rows (one ``us_per_query`` per measured flush) so
+  the ``BENCH_streaming.json`` digest medians a real sample set.
+
+A second mini-section exercises the heterogeneous-batch parity claim
+directly: a mixed-tenant mixed-filter service flush must equal solo
+``MultiTenantStore.retrieve`` calls bit-for-bit (also asserted — this is
+the continuous-filtered-batching correctness contract, not a trend).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import csv_row, record
+
+
+def _hetero_parity_check() -> dict:
+    """Mixed-tenant mixed-filter flush vs solo retrieves, bit-for-bit."""
+    from repro.core import BallFilter, BoxFilter
+    from repro.core.cubegraph import CubeGraphConfig
+    from repro.serving.rag import Document
+    from repro.serving.service import CubeGraphService, ServeRequest
+    from repro.serving.tenancy import MultiTenantStore
+    from repro.streaming import StreamConfig
+
+    rng = np.random.default_rng(3)
+    d, m = 16, 3
+    store = MultiTenantStore(
+        d, m, stream_cfg=StreamConfig(
+            time_dim=2, seal_max_points=96, n_shards=2,
+            index_cfg=CubeGraphConfig(n_layers=2, m_intra=8, m_cross=4)))
+    svc = CubeGraphService(store)
+    for tenant, base in (("a", 0), ("b", 10_000)):
+        store.create_collection(tenant)
+        docs = [Document(doc_id=base + i,
+                         tokens=np.arange(4, dtype=np.int32),
+                         embedding=rng.standard_normal(d)
+                         .astype(np.float32),
+                         metadata=np.array([rng.uniform(0, 10),
+                                            rng.uniform(0, 10),
+                                            float(i)]))
+                for i in range(250)]
+        store.insert(tenant, docs)
+    store.maintenance()
+    filters = (BoxFilter(lo=np.float32([0, 0, -1e9]),
+                         hi=np.float32([8, 8, 1e9])),
+               BallFilter(center=np.float32([5, 5]),
+                          radius=np.float32(3.5)),
+               None)
+    reqs = []
+    for rid in range(12):
+        reqs.append(ServeRequest(
+            req_id=rid, tenant=("a", "b")[rid % 2],
+            query_emb=rng.standard_normal(d).astype(np.float32),
+            filt=filters[rid % 3], k=(5, 10)[rid % 2]))
+    for r in reqs:
+        assert svc.submit(r) is None
+    answers = svc.flush()
+    n_ok = 0
+    for r in reqs:
+        sr = answers[r.req_id]
+        solo = store.retrieve(r.tenant, r.query_emb, r.filt, k=r.k)
+        assert np.array_equal(sr.gids, solo.gids[0]) \
+            and np.array_equal(sr.dists, solo.dists[0]) \
+            and [d.doc_id for d in sr.docs] == \
+                [d.doc_id for d in solo.docs[0]], \
+            f"hetero-batch parity violated for req {r.req_id}"
+        n_ok += 1
+    return {"n_requests": len(reqs), "n_parity_ok": n_ok}
+
+
+def run() -> None:
+    """Entry point registered as ``exp18_serving`` in benchmarks/run.py."""
+    from repro.serving.workload import (GeoTemporalWorkload,
+                                        SLO_REPORT_KEYS, WorkloadConfig)
+
+    report = GeoTemporalWorkload(WorkloadConfig(
+        n_tenants=2, n_initial=400, n_steps=6, queries_per_step=10,
+        burst_points=64, warmup_steps=2, seal_max_points=128,
+        n_shards=2, deadline_ms=2000.0, slo_ms=2000.0)).run()
+    missing = [key for key in SLO_REPORT_KEYS if key not in report]
+    assert not missing, f"SLO report missing keys: {missing}"
+    assert report["isolation_ok"], "tenant isolation check failed"
+    assert report["recall_at_10"] is not None \
+        and report["recall_at_10"] >= 0.95, \
+        f"recall@10 {report['recall_at_10']} below the 0.95 floor"
+    parity = _hetero_parity_check()
+    record("exp18_serving", {"workload": report,
+                             "hetero_batch_parity": parity})
+    samples = [row["us_per_query"] for row in report["latency_samples"]]
+    csv_row("exp18_serving",
+            float(np.median(samples)) if samples else 0.0,
+            f"recall@10={report['recall_at_10']} "
+            f"p50={report['latency_ms_p50']}ms "
+            f"p99={report['latency_ms_p99']}ms "
+            f"slo_viol={report['slo_violation_fraction']} "
+            f"degraded={report['degraded_fraction']} "
+            f"isolation_ok={report['isolation_ok']}")
+
+
+if __name__ == "__main__":
+    run()

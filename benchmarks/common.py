@@ -94,7 +94,7 @@ def csv_row(name: str, us_per_call: float, derived: str):
 
 # -- machine-readable perf trajectory (BENCH_streaming.json) -----------------
 STREAMING_SECTIONS = ("exp9_", "exp10_", "exp11_", "exp12_", "exp13_",
-                      "exp14_", "exp15_", "exp16_", "exp17_")
+                      "exp14_", "exp15_", "exp16_", "exp17_", "exp18_")
 _SUMMARY_LATENCY_KEYS = {   # payload key -> (scale to µs, canonical name)
     "us_per_query": (1.0, "query_us"),
     "first_query_ms_after_seal": (1e3, "first_query_after_seal_us"),

@@ -42,6 +42,7 @@ SECTIONS = (
     ("exp15_read_path_planner", "bench_planner", "run"),
     ("exp16_tiered_storage", "bench_tiering", "run"),
     ("exp17_resilience", "bench_resilience", "run"),
+    ("exp18_serving", "bench_serving", "run"),
     ("a5_aspect_ratio", "bench_aspect_ratio", "run"),
     ("a6_merge_strategy", "bench_merge_strategy", "run"),
     ("kernels", "bench_kernels", "run"),

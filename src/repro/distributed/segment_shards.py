@@ -68,13 +68,15 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from ..core import Filter
 from ..kernels import (PAD_META, dispatch_trace_count, next_pow2,
                        quant_meta_rows, round_up, sharded_filtered_topk,
+                       sharded_filtered_topk_grouped,
                        sharded_quant_filtered_topk)
 from ..obs.trace import NULL_TRACE, block_ready
 
 __all__ = ["BucketedShardPack", "PackView", "SegmentShardSource",
            "ShardPack", "bucket_cap_for", "bucket_graph_seeds",
            "build_bucketed_pack", "build_shard_pack", "host_topk",
-           "make_shard_mesh", "pack_search", "pack_search_blocks"]
+           "make_shard_mesh", "pack_search", "pack_search_blocks",
+           "pack_search_blocks_grouped"]
 
 _MPAD = 128                      # metadata lane padding (kernel layout)
 
@@ -1221,6 +1223,124 @@ def pack_search_blocks(view: PackView, queries: np.ndarray,
                         candidate_slots=queries.shape[0] * k_out,
                         cache_hit=cache_hit)
         blocks.append((out_g, out_d))
+    return blocks
+
+
+def pack_search_blocks_grouped(view: PackView, groups,
+                               metric: str = "l2", trace=None,
+                               observe=None, on_cold=None,
+                               deadlines=None, on_expired=None,
+                               fault=None, observe_group=None
+                               ) -> List[List[Tuple[np.ndarray, np.ndarray]]]:
+    """Heterogeneous-request sibling of :func:`pack_search_blocks`: several
+    ``(queries, filt, k, t_lo, t_hi)`` request groups scan the pack's fp32
+    buckets in ONE pass, sharing each bucket's device block across every
+    group that is temporally active there.
+
+    Per bucket, the groups whose temporal window intersects the bucket
+    (exactly the groups for which a solo :func:`pack_search_blocks` call
+    would dispatch it) are batched into one
+    :func:`repro.kernels.sharded_filtered_topk_grouped` call — the bucket's
+    ``[rows, cap, ·]`` block is read once, not once per distinct filter —
+    and each group's shard-local lists are merged with the group's own
+    temporal ``active`` mask and ``k``.  Because the grouped kernel
+    dispatch is a ``vmap`` of the solo dispatch over the group axis, every
+    group's candidate block is **bit-for-bit** what its solo call would
+    have produced; callers may therefore merge the returned blocks exactly
+    as if each group had scanned alone.
+
+    ``deadlines`` (parallel to ``groups``, entries with an ``expired()``
+    method or ``None``) drops a group from all remaining buckets once its
+    deadline passes, reporting via ``on_expired(group_idx,
+    buckets_remaining)`` exactly once; ``fault()`` fires before each
+    bucket's dispatch (the owner's ``query.bucket`` fault point);
+    ``observe`` gets one union observation per bucket (cache accounting),
+    while ``observe_group(group_idx, cap, rows=, active_rows=,
+    candidates=, candidate_slots=, cache_hit=)`` attributes the same
+    dispatch per group — the per-tenant ``BucketStats`` hook.  Returns one
+    candidate-block list per group (a dropped group keeps the blocks
+    gathered before its deadline expired).
+    """
+    trace = NULL_TRACE if trace is None else trace
+    groups = [(np.atleast_2d(np.asarray(q, np.float32)), f, int(k),
+               float(t_lo), float(t_hi)) for q, f, k, t_lo, t_hi in groups]
+    want_obs = (observe is not None or observe_group is not None
+                or trace.enabled)
+    blocks: List[List[Tuple[np.ndarray, np.ndarray]]] = \
+        [[] for _ in groups]
+    expired = [False] * len(groups)
+    buckets = list(view.buckets)
+    for bi, bv in enumerate(buckets):
+        if deadlines is not None:
+            for gi, dl in enumerate(deadlines):
+                if not expired[gi] and dl is not None and dl.expired():
+                    expired[gi] = True
+                    if on_expired is not None:
+                        on_expired(gi, len(buckets) - bi)
+        rows = int(bv.gids.shape[0])
+        actives = {}
+        live: List[int] = []
+        for gi, (_, _, _, t_lo, t_hi) in enumerate(groups):
+            if expired[gi]:
+                continue
+            act = bv.active_rows(t_lo, t_hi)
+            if act.any():
+                actives[gi] = act
+                live.append(gi)
+            elif observe_group is not None:   # whole-block temporal prune
+                observe_group(gi, bv.cap, rows=rows, active_rows=0)
+        if not live:
+            if observe is not None:
+                observe(bv.cap, rows=rows, active_rows=0)
+            continue
+        if fault is not None:
+            fault()
+        if not bv.resident and on_cold is not None:
+            on_cold(bv.cap, bv.stage_bytes)
+        union_active = int(np.logical_or.reduce(
+            [actives[gi] for gi in live]).sum())
+        traces0 = dispatch_trace_count() if want_obs else 0
+        with trace.span("bucket_dispatch_grouped", cap=bv.cap, rows=rows,
+                        active_rows=union_active, n_groups=len(live),
+                        resident=bv.resident) as sp:
+            sub = [(groups[gi][0], groups[gi][1], min(groups[gi][2], bv.cap))
+                   for gi in live]
+            results = sharded_filtered_topk_grouped(sub, bv.x, bv.s,
+                                                    metric=metric, m=view.m)
+            merged = []
+            for (ids, dd), gi in zip(results, live):
+                kk = min(groups[gi][2], bv.cap)
+                k_out = min(groups[gi][2], rows * kk)
+                merged.append(_merge_shard_topk(ids, dd, bv.gids,
+                                                jnp.asarray(actives[gi]),
+                                                k_out))
+            block_ready(merged[-1])
+        cache_hit = (dispatch_trace_count() == traces0) if want_obs \
+            else False
+        n_cand_total = 0
+        for (out_g, out_d), gi in zip(merged, live):
+            out_g = np.asarray(out_g, np.int64)
+            out_d = np.asarray(out_d, np.float32)
+            blocks[gi].append((out_g, out_d))
+            if want_obs:
+                n_cand = int((out_g >= 0).sum())
+                n_cand_total += n_cand
+                if observe_group is not None:
+                    observe_group(
+                        gi, bv.cap, rows=rows,
+                        active_rows=int(actives[gi].sum()),
+                        candidates=n_cand,
+                        candidate_slots=out_g.shape[0] * out_g.shape[1],
+                        cache_hit=cache_hit)
+        if want_obs:
+            sp.annotate(candidates=n_cand_total, cache_hit=cache_hit)
+            if observe is not None:
+                observe(bv.cap, rows=rows, active_rows=union_active,
+                        candidates=n_cand_total,
+                        candidate_slots=sum(
+                            g.shape[0] * g.shape[1]
+                            for g, _ in (blocks[gi][-1] for gi in live)),
+                        cache_hit=cache_hit)
     return blocks
 
 

@@ -13,9 +13,11 @@ interpret mode on CPU; see DESIGN.md §2.2).
 from .ops import (PAD_META, dispatch_trace_count, exact_filtered_search,
                   filtered_topk, next_pow2, pairwise_dist, quant_meta_rows,
                   round_up, sharded_filtered_topk,
+                  sharded_filtered_topk_grouped,
                   sharded_quant_filtered_topk, warm_sharded_shapes)
 
 __all__ = ["PAD_META", "dispatch_trace_count", "exact_filtered_search",
            "filtered_topk", "next_pow2", "pairwise_dist", "quant_meta_rows",
            "round_up", "sharded_filtered_topk",
+           "sharded_filtered_topk_grouped",
            "sharded_quant_filtered_topk", "warm_sharded_shapes"]

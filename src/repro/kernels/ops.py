@@ -24,7 +24,8 @@ from .filtered_topk import filtered_topk_kernel_call
 from .quant_topk import quant_filtered_topk_kernel_call
 
 __all__ = ["pairwise_dist", "filtered_topk", "next_pow2", "round_up",
-           "sharded_filtered_topk", "sharded_quant_filtered_topk",
+           "sharded_filtered_topk", "sharded_filtered_topk_grouped",
+           "sharded_quant_filtered_topk",
            "quant_meta_rows", "warm_sharded_shapes", "dispatch_trace_count",
            "encode_filter", "exact_filtered_search", "PAD_META"]
 
@@ -385,6 +386,99 @@ def sharded_filtered_topk(q, xs, ss, filt: Optional[Filter], k: int,
     dd, ids = _sharded_kernel_dispatch(kind, kpad, metric, tq, tn,
                                        interpret)(qp, xp, sp, pj)
     return ids[:, :bq, :k], dd[:, :bq, :k]
+
+
+@functools.lru_cache(maxsize=None)
+def _grouped_kernel_dispatch(kind: str, kpad: int, metric: str, tq: int,
+                             tn: int, interpret: bool):
+    """Multi-group sibling of :func:`_sharded_kernel_dispatch`: one jitted
+    dispatch that vmaps the fused kernel over a *group* axis of
+    ``(queries, filter params)`` pairs on top of the usual shard axis, so a
+    heterogeneous-filter batch scans a bucket's device block once instead
+    of once per distinct filter.  Groups sharing a dispatch must share the
+    static config (filter kind, kpad, tiles) — the wrappers class groups by
+    exactly that key."""
+    def call(qps, xp, sp, pjs):
+        _TRACE_COUNT[0] += 1             # python side-effect: trace time only
+        def per_group(qp, pj):
+            def one(x, s):
+                return filtered_topk_kernel_call(qp, x, s, pj, kind=kind,
+                                                 kpad=kpad, metric=metric,
+                                                 tq=tq, tn=tn,
+                                                 interpret=interpret)
+            return jax.vmap(one)(xp, sp)
+        return jax.vmap(per_group)(qps, pjs)
+    return jax.jit(call)
+
+
+def sharded_filtered_topk_grouped(groups, xs, ss, metric: str = "l2",
+                                  use_kernel: bool = True, tq: int = 64,
+                                  tn: int = 256, interpret: bool = True,
+                                  m: Optional[int] = None):
+    """Heterogeneous-filter shard-stack scan: several ``(q, filt, k)``
+    request groups against ONE ``[g, n, d]`` / ``[g, n, m]`` shard stack.
+
+    ``groups`` is a sequence of ``(q [bq_i, d], filt_i, k_i)`` tuples.
+    Groups whose filters share a kernel encoding class — same filter
+    ``kind`` and same ``kpad = next_pow2(max(k, 8))`` — are stacked on a
+    *group* axis (queries padded to the widest group's padded row count,
+    one packed ``[4, 128]`` parameter block per group) and dispatched as a
+    single vmapped kernel call per class, so the stack's device blocks are
+    read once per class instead of once per request group.  Singleton
+    classes and groups whose filters have no kernel encoding go through
+    :func:`sharded_filtered_topk` unchanged.
+
+    Returns a list of ``(ids [g, bq_i, k_i], dists [g, bq_i, k_i])``
+    aligned with ``groups``.  Each entry is **bit-for-bit** what
+    ``sharded_filtered_topk(q_i, xs, ss, filt_i, k_i)`` returns alone: the
+    kernel computes every query row independently (zero-padded rows and
+    sibling groups cannot perturb a row's distances), and a class shares
+    the per-group static config with the solo dispatch, so the vmapped
+    call runs the identical computation per group.
+    """
+    groups = list(groups)
+    xs = jnp.asarray(xs, jnp.float32)
+    ss = jnp.asarray(ss, jnp.float32)
+    m = ss.shape[2] if m is None else int(m)
+    out: list = [None] * len(groups)
+    classes: "OrderedDict[tuple, list]" = OrderedDict()
+    for i, (q, filt, k) in enumerate(groups):
+        enc = encode_filter(filt, m) if use_kernel else None
+        if enc is None:
+            out[i] = sharded_filtered_topk(
+                q, xs, ss, filt, int(k), metric=metric,
+                use_kernel=use_kernel, tq=tq, tn=tn, interpret=interpret,
+                m=m)
+            continue
+        kind, params = enc
+        kpad = _next_pow2(max(int(k), 8))
+        classes.setdefault((kind, kpad), []).append((i, q, params, int(k)))
+    for (kind, kpad), members in classes.items():
+        if len(members) == 1:
+            i, q, _, k = members[0]
+            out[i] = sharded_filtered_topk(
+                q, xs, ss, groups[i][1], k, metric=metric, tq=tq, tn=tn,
+                interpret=interpret, m=m)
+            continue
+        tnk = max(tn, kpad)
+        qps, bqs = [], []
+        for _, q, _, _ in members:
+            q = jnp.asarray(q, jnp.float32)
+            bqs.append(q.shape[0])
+            qps.append(_pad_to(_pad_to(q, 1, 128, 0.0), 0, tq, 0.0))
+        bq_pad = max(qp.shape[0] for qp in qps)
+        qps = jnp.stack([qp if qp.shape[0] == bq_pad
+                         else jnp.pad(qp, ((0, bq_pad - qp.shape[0]),
+                                           (0, 0)))
+                         for qp in qps])
+        pjs = jnp.stack([jnp.asarray(p) for _, _, p, _ in members])
+        xp = _pad_to(_pad_to(xs, 2, 128, 0.0), 1, tnk, 0.0)
+        sp = _pad_to(_pad_to(ss, 2, 128, 0.0), 1, tnk, _PAD_META)
+        dd, ids = _grouped_kernel_dispatch(kind, kpad, metric, tq, tnk,
+                                           interpret)(qps, xp, sp, pjs)
+        for gi, (i, _, _, k) in enumerate(members):
+            out[i] = (ids[gi, :, :bqs[gi], :k], dd[gi, :, :bqs[gi], :k])
+    return out
 
 
 def quant_meta_rows(m: int) -> int:

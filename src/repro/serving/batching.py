@@ -124,36 +124,72 @@ class RetrievalRequest:
     query_emb: np.ndarray            # [d_emb]
     filt: Filter
     k: int = 10
+    deadline_ms: Optional[float] = None   # per-request SLO budget
     enqueued_at: float = 0.0         # stamped by RetrievalBatcher.submit
 
 
 @dataclasses.dataclass
 class RetrievalFailure:
-    """Error result for a request whose batched retrieve raised.
+    """Error result for a request the serving layer could not answer.
 
     ``flush()`` never drops queued requests: a chunk whose store dispatch
     raises maps each of its requests to one of these (instead of a document
-    list) while every other chunk drains normally.
+    list) while every other chunk drains normally.  ``reason`` is a stable
+    machine-readable tag — ``"error"`` for dispatch exceptions,
+    ``"over_quota"`` for admission-control rejections
+    (``serving/service.py``).
     """
     req_id: int
     error: str
+    reason: str = "error"
 
 
-def _filter_key(filt: Filter, k: int):
-    """Hashable identity for grouping: pytree structure + parameter bytes."""
+def _leaf_key(leaf):
+    """One pytree leaf -> hashable *value* key.
+
+    Array-like leaves key on ``(dtype, shape, bytes)`` — ``tobytes()``
+    alone would collide a ``[2, 1]`` float32 box edge with a ``[2]`` one
+    and an int32 leaf with a float32 of the same bits.  A leaf that numpy
+    cannot turn into a numeric array (an unregistered filter object, say)
+    lands in an object array, whose ``tobytes()`` is its *pointer* —
+    identity, not value — so those recurse over the object's field values
+    instead (dataclass fields or ``__dict__``), falling back to ``repr``
+    for plain constants.
+    """
+    a = np.asarray(leaf)
+    if a.dtype != object:
+        return (a.dtype.str, a.shape, a.tobytes())
+    if dataclasses.is_dataclass(leaf) and not isinstance(leaf, type):
+        state = {f.name: getattr(leaf, f.name)
+                 for f in dataclasses.fields(leaf)}
+    else:
+        state = getattr(leaf, "__dict__", None)
+    if state is not None:
+        return (type(leaf).__name__,
+                tuple((name, _leaf_key(v))
+                      for name, v in sorted(state.items())))
+    return (type(leaf).__name__, repr(leaf))
+
+
+def _filter_key(filt: Optional[Filter], k: int):
+    """Hashable *value-based* identity for grouping: pytree structure plus
+    per-leaf ``(dtype, shape, bytes)`` — two equal-valued but distinct
+    filter objects produce the same key and batch together."""
     leaves, treedef = jax.tree_util.tree_flatten(filt)
-    return (str(treedef), k,
-            tuple(np.asarray(leaf).tobytes() for leaf in leaves))
+    return (str(treedef), k, tuple(_leaf_key(leaf) for leaf in leaves))
 
 
 class RetrievalBatcher:
     """Batches retrieval requests per shared filter.
 
     Requests arriving between flushes queue up; ``flush()`` partitions them
-    by (filter, k), stacks each group's query embeddings, and issues a
-    single batched ``DocumentStore.retrieve`` per group — over a streaming
-    store that is one pruned multi-segment fan-out amortized across the
-    whole group.  Groups larger than ``max_batch`` are split.
+    by (filter value, k, deadline), stacks each group's query embeddings,
+    and issues a single batched ``DocumentStore.retrieve`` per group — over
+    a streaming store that is one pruned multi-segment fan-out amortized
+    across the whole group.  Groups larger than ``max_batch`` are split.
+    Each returned row is a :class:`~repro.serving.rag.RetrievedDocs`
+    carrying the underlying query's ``degraded`` / ``reasons`` markers, so
+    a deadline overrun reaches the caller instead of being dropped.
 
     With ``maintenance_every > 0`` (streaming stores only), every that-many
     flushes trigger one lifecycle tick with compaction — the expensive
@@ -195,7 +231,9 @@ class RetrievalBatcher:
         groups: Dict[object, List[RetrievalRequest]] = {}
         while self.queue:
             req = self.queue.popleft()
-            groups.setdefault(_filter_key(req.filt, req.k), []).append(req)
+            groups.setdefault(
+                (_filter_key(req.filt, req.k), req.deadline_ms),
+                []).append(req)
         results: Dict[int, list] = {}
         t_flush = time.perf_counter()
         wait_hist = self.metrics.histogram("retrieval_queue_wait_ms")
@@ -211,9 +249,13 @@ class RetrievalBatcher:
                     if r.enqueued_at:
                         wait_hist.observe((t_flush - r.enqueued_at) * 1e3)
                 q = np.stack([r.query_emb for r in chunk]).astype(np.float32)
+                # deadline-free chunks call retrieve without the kwarg so
+                # duck-typed stores predating deadline_ms keep working
+                kw = ({"deadline_ms": chunk[0].deadline_ms}
+                      if chunk[0].deadline_ms is not None else {})
                 try:
-                    rows = self.store.retrieve(q, chunk[0].filt,
-                                               k=chunk[0].k, ef=self.ef)
+                    rows = self.store.retrieve(
+                        q, chunk[0].filt, k=chunk[0].k, ef=self.ef, **kw)
                 except Exception as exc:       # noqa: BLE001 — isolate chunk
                     self.metrics.counter("retrieval_failed_total").inc(
                         len(chunk))

@@ -30,6 +30,26 @@ class Document:
     metadata: np.ndarray            # [m] (lon, lat, t, ...)
 
 
+class RetrievedDocs(list):
+    """One query's retrieved document row, carrying the streaming
+    :class:`~repro.streaming.resilience.QueryResult` markers.
+
+    Behaves exactly like the plain ``List[Document]`` it used to be
+    (iteration, indexing, truthiness), plus ``degraded`` / ``reasons``:
+    a deadline-bounded retrieve that ran out of budget returns its
+    partial answer with ``degraded=True`` and per-reason skip counts
+    instead of silently dropping the marker.  Static-index stores never
+    degrade (no deadline machinery), so there ``degraded`` is always
+    False.
+    """
+
+    def __init__(self, docs=(), degraded: bool = False,
+                 reasons: Optional[dict] = None):
+        super().__init__(docs)
+        self.degraded = bool(degraded)
+        self.reasons = dict(reasons or {})
+
+
 class DocumentStore:
     """Filtered-retrieval store with two backends:
 
@@ -147,22 +167,86 @@ class DocumentStore:
         return self.manager.snapshot_to(directory)
 
     def retrieve(self, query_emb: np.ndarray, filt: Filter, k: int,
-                 ef: int = 64, trace=None) -> List[List[Document]]:
+                 ef: int = 64, trace=None,
+                 deadline_ms: Optional[float] = None
+                 ) -> List[RetrievedDocs]:
         """Filtered top-k document retrieval for a query-embedding batch.
 
         The per-request end-to-end latency (index query + document
         materialization) lands in the ``retrieve_ms`` histogram; pass a
         ``repro.obs.trace.QueryTrace`` to additionally capture the span
-        tree of the underlying streaming query."""
+        tree of the underlying streaming query.
+
+        ``deadline_ms`` bounds the streaming query's time budget
+        (see ``streaming/resilience.py``); on overrun each returned
+        :class:`RetrievedDocs` row carries the partial answer with
+        ``degraded=True`` and per-reason skip counts.  Static stores
+        ignore the deadline (one bounded beam search; nothing to skip)."""
         t0 = time.perf_counter()
         q = np.atleast_2d(query_emb)
+        degraded, reasons = False, {}
         if self.streaming:
-            ids, _ = self.manager.query(q, filt, k=k, ef=ef, trace=trace)
+            res = self.manager.query(q, filt, k=k, ef=ef, trace=trace,
+                                     deadline_ms=deadline_ms)
+            ids, _ = res
+            degraded = bool(getattr(res, "degraded", False))
+            reasons = dict(getattr(res, "reasons", {}) or {})
         else:
             ids, _ = self.index.query(q, filt, k=k, ef=ef)
-        out = [[self.docs[i] for i in row if i >= 0]
+        out = [RetrievedDocs((self.docs[i] for i in row if i >= 0),
+                             degraded=degraded, reasons=reasons)
                for row in np.asarray(ids)]
         self.metrics.counter("retrieve_requests_total").inc(q.shape[0])
+        self.metrics.histogram("retrieve_ms").observe(
+            (time.perf_counter() - t0) * 1e3)
+        return out
+
+    def retrieve_grouped(self, requests) -> dict:
+        """Continuous filtered batching over heterogeneous requests:
+        answer a batch of :class:`~repro.serving.batching
+        .RetrievalRequest` with *different* filters / ``k`` / deadlines
+        in shared dispatches — a streaming store reads each sealed
+        bucket's device block once for the whole batch
+        (``SegmentManager.query_grouped``) instead of once per distinct
+        filter.  Answers are bit-for-bit the per-request
+        :meth:`retrieve` answers.  Returns ``{req_id: RetrievedDocs}``
+        (one row per request)."""
+        from .batching import _filter_key
+        requests = list(requests)
+        out: dict = {}
+        if not requests:
+            return out
+        t0 = time.perf_counter()
+        groups: dict = {}
+        for r in requests:
+            groups.setdefault(
+                (_filter_key(r.filt, r.k), r.deadline_ms),
+                []).append(r)
+        members = list(groups.values())
+        if self.streaming:
+            from ..streaming import GroupQuery
+            gqs = [GroupQuery(
+                np.stack([r.query_emb for r in reqs]).astype(np.float32),
+                reqs[0].filt, k=reqs[0].k,
+                deadline_ms=reqs[0].deadline_ms) for reqs in members]
+            for reqs, res in zip(members,
+                                 self.manager.query_grouped(gqs)):
+                ids = np.asarray(res[0])
+                degraded = bool(getattr(res, "degraded", False))
+                reasons = dict(getattr(res, "reasons", {}) or {})
+                for r, row in zip(reqs, ids):
+                    out[r.req_id] = RetrievedDocs(
+                        (self.docs[i] for i in row if i >= 0),
+                        degraded=degraded, reasons=reasons)
+        else:
+            for reqs in members:
+                q = np.stack([r.query_emb
+                              for r in reqs]).astype(np.float32)
+                ids, _ = self.index.query(q, reqs[0].filt, k=reqs[0].k)
+                for r, row in zip(reqs, np.asarray(ids)):
+                    out[r.req_id] = RetrievedDocs(
+                        self.docs[i] for i in row if i >= 0)
+        self.metrics.counter("retrieve_requests_total").inc(len(requests))
         self.metrics.histogram("retrieve_ms").observe(
             (time.perf_counter() - t0) * 1e3)
         return out

@@ -20,7 +20,8 @@
 from .manager import CompactionPlan, SegmentManager, StreamConfig
 from .persistence import (RestoreError, StreamPersistence, WriteAheadLog,
                           load_manifest, restore_manager)
-from .query import merge_topk, query_segments, temporal_bounds
+from .query import (GroupQuery, merge_topk, query_segments,
+                    query_segments_grouped, temporal_bounds)
 from .resilience import (FAULT_POINTS, Deadline, FaultError, FaultInjector,
                          QueryResult, Supervisor)
 from .segments import (DeltaBuffer, DeltaSnapshot, PointStore, SealedSegment,
@@ -30,7 +31,8 @@ __all__ = [
     "CompactionPlan", "SegmentManager", "StreamConfig",
     "DeltaBuffer", "DeltaSnapshot", "PointStore", "SealedSegment",
     "SegmentQueryStats",
-    "merge_topk", "query_segments", "temporal_bounds",
+    "GroupQuery", "merge_topk", "query_segments",
+    "query_segments_grouped", "temporal_bounds",
     "RestoreError", "StreamPersistence", "WriteAheadLog",
     "load_manifest", "restore_manager",
     "FAULT_POINTS", "Deadline", "FaultError", "FaultInjector",

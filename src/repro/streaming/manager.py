@@ -1146,6 +1146,17 @@ class SegmentManager:
                               reasons=out.reasons)          # strips it
         return res
 
+    def query_grouped(self, groups, trace=None, observe_group=None):
+        """Continuous filtered batching entry point: answer several
+        heterogeneous :class:`~repro.streaming.query.GroupQuery` request
+        groups in one pass, sharing each sealed bucket's device-block
+        read across every group active there; see
+        :func:`repro.streaming.query.query_segments_grouped` (answers
+        are bit-for-bit the per-group :meth:`query` answers)."""
+        from .query import query_segments_grouped
+        return query_segments_grouped(self, groups, trace=trace,
+                                      observe_group=observe_group)
+
     def stats(self) -> dict:
         """Lifecycle counters, per-segment occupancy, and the ``obs``
         metrics block for dashboards.  Strict-JSON safe end-to-end:

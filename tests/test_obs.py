@@ -339,6 +339,54 @@ def test_obs_dump_tool_roundtrip(tmp_path):
     assert 'cap="' in text
 
 
+def test_multi_tenant_obs_dump_tenant_labels():
+    """MultiTenantStore.stats() carries a per-collection ``tenants`` block
+    and obs_dump renders it as ``{tenant=}``-labeled gauges — scalar
+    collection facts plus each tenant's own BucketStats rows with a
+    compound ``{tenant=,cap=}`` label — alongside the shared-registry
+    tenant-suffixed counters."""
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tools"))
+    try:
+        import obs_dump
+    finally:
+        sys.path.pop(0)
+    from repro.serving.rag import Document
+    from repro.serving.service import CubeGraphService, ServeRequest
+    from repro.serving.tenancy import MultiTenantStore
+
+    rng = np.random.default_rng(0)
+    store = MultiTenantStore(
+        8, 3, stream_cfg=_stream_cfg(n_shards=2, seal_max_points=64))
+    svc = CubeGraphService(store)
+    for tenant in ("acme", "globex"):
+        store.create_collection(tenant, quota_points=1000)
+        store.insert(tenant, [
+            Document(i, np.arange(3, dtype=np.int32),
+                     rng.normal(size=8).astype(np.float32),
+                     np.array([0.5, 0.5, float(i)]))
+            for i in range(150)])
+    store.maintenance()
+    for rid in range(4):
+        svc.submit(ServeRequest(
+            req_id=rid, tenant=("acme", "globex")[rid % 2],
+            query_emb=rng.normal(size=8).astype(np.float32), k=5))
+    svc.flush()
+
+    stats = store.stats()
+    json.dumps(stats, allow_nan=False)          # strict-JSON export holds
+    assert set(stats["tenants"]) == {"acme", "globex"}
+    assert stats["tenants"]["acme"]["live_points"] == 150
+    # per-tenant BucketStats populated by the grouped dispatch callback
+    assert stats["tenants"]["acme"]["buckets"], "tenant bucket stats empty"
+
+    text = obs_dump.render(stats)
+    assert 'cubegraph_tenant_live_points{tenant="acme"} 150' in text
+    assert 'cubegraph_tenant_quota_points{tenant="globex"} 1000' in text
+    assert 'cubegraph_tenant_bucket_rows_scanned{tenant="acme",cap="' in text
+    # registry counters with the tenant label-suffix idiom flow through too
+    assert 'cubegraph_tenant_requests_total{tenant="acme"} 2' in text
+
+
 def test_document_store_metrics_snapshot():
     from repro.serving.rag import Document, DocumentStore
     rng = np.random.default_rng(0)

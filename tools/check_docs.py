@@ -5,11 +5,11 @@ Three checks, no third-party dependencies:
 
 1. every ``benchmarks/bench_*.py`` experiment is documented in
    ``docs/benchmarks.md`` (mentioned by file name);
-2. ``README.md`` links both ``docs/architecture.md`` and
-   ``docs/benchmarks.md``;
-3. docstring lint over ``src/repro/streaming`` and
-   ``src/repro/distributed``: every module, public class, and public
-   function/method carries a docstring (AST-based, pydocstyle's
+2. ``README.md`` links the architecture, benchmarks, observability, and
+   serving docs;
+3. docstring lint over ``src/repro/streaming``, ``src/repro/distributed``,
+   and the multi-tenant serving tier: every module, public class, and
+   public function/method carries a docstring (AST-based, pydocstyle's
    D100/D101/D102/D103 subset).
 
 Exit code 0 when clean; prints one line per violation otherwise.
@@ -25,7 +25,10 @@ REPO = pathlib.Path(__file__).resolve().parent.parent
 # into the lint without sweeping in its siblings.
 LINT_DIRS = ("src/repro/streaming", "src/repro/distributed",
              "src/repro/quant", "src/repro/obs",
-             "src/repro/kernels/graph_topk.py")
+             "src/repro/kernels/graph_topk.py",
+             "src/repro/serving/service.py",
+             "src/repro/serving/tenancy.py",
+             "src/repro/serving/workload.py")
 # Files the docstring lint MUST cover — guards against a rename/move
 # silently dropping a linted subsystem out of LINT_DIRS.
 REQUIRED_LINTED = ("src/repro/streaming/persistence.py",
@@ -38,7 +41,10 @@ REQUIRED_LINTED = ("src/repro/streaming/persistence.py",
                    "src/repro/quant/rerank.py",
                    "src/repro/obs/metrics.py",
                    "src/repro/obs/trace.py",
-                   "src/repro/kernels/graph_topk.py")
+                   "src/repro/kernels/graph_topk.py",
+                   "src/repro/serving/service.py",
+                   "src/repro/serving/tenancy.py",
+                   "src/repro/serving/workload.py")
 
 
 def check_bench_docs() -> list:
@@ -59,7 +65,7 @@ def check_readme_links() -> list:
     readme = (REPO / "README.md").read_text()
     errors = []
     for target in ("docs/architecture.md", "docs/benchmarks.md",
-                   "docs/observability.md"):
+                   "docs/observability.md", "docs/serving.md"):
         if not (REPO / target).exists():
             errors.append(f"{target} is missing")
         if target not in readme:

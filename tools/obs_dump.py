@@ -13,7 +13,10 @@ Input (positional, or stdin with ``-``) is a JSON file holding any of:
 Counters/gauges map 1:1; histograms are exposed as summaries (quantile
 labels + ``_sum``/``_count``); per-capacity ``BucketStats`` rows become
 ``cubegraph_bucket_*{cap="..."}`` gauges so the planner-contract numbers
-(pruning rate, selectivity, scanned rows) are scrapeable per bucket.
+(pruning rate, selectivity, scanned rows) are scrapeable per bucket.  A
+``MultiTenantStore.stats()`` dump additionally carries a ``tenants``
+block, rendered as ``cubegraph_tenant_*{tenant="..."}`` gauges (plus
+``{tenant=,cap=}`` rows for each collection's own bucket stats).
 
 Usage::
 
@@ -51,6 +54,45 @@ def bucket_text(buckets: dict, prefix: str = "cubegraph") -> str:
     return "\n".join(lines) + ("\n" if lines else "")
 
 
+def tenant_text(tenants: dict, prefix: str = "cubegraph") -> str:
+    """``MultiTenantStore.stats()['tenants']`` -> per-tenant labeled gauges.
+
+    Scalar per-collection fields (live points, quota...) become
+    ``{prefix}_tenant_*{tenant="..."}`` gauges; each collection's
+    per-capacity ``BucketStats`` rows keep their ``cap`` label and gain a
+    ``tenant`` label, so per-tenant scan behaviour is scrapeable next to
+    the shared-substrate totals.
+    """
+    lines = []
+    scalar_keys = sorted({k for row in tenants.values()
+                          for k, v in row.items()
+                          if isinstance(v, (int, float))
+                          and not isinstance(v, bool)})
+    for key in scalar_keys:
+        name = f"{prefix}_tenant_{key}"
+        lines.append(f"# TYPE {name} gauge")
+        for tenant in sorted(tenants):
+            value = tenants[tenant].get(key)
+            if isinstance(value, bool) or not isinstance(value, (int, float)):
+                continue
+            lines.append(f'{name}{{tenant="{tenant}"}} {value}')
+    bucket_keys = sorted({k for row in tenants.values()
+                          for cap_row in (row.get("buckets") or {}).values()
+                          for k in cap_row})
+    for key in bucket_keys:
+        name = f"{prefix}_tenant_bucket_{key}"
+        lines.append(f"# TYPE {name} gauge")
+        for tenant in sorted(tenants):
+            caps = tenants[tenant].get("buckets") or {}
+            for cap in sorted(caps, key=int):
+                value = caps[cap].get(key)
+                if value is None:
+                    continue
+                lines.append(
+                    f'{name}{{tenant="{tenant}",cap="{cap}"}} {value}')
+    return "\n".join(lines) + ("\n" if lines else "")
+
+
 def _top_level_gauges(stats: dict, prefix: str = "cubegraph") -> str:
     """Scalar ``stats()`` fields (liveness, pack bytes...) as gauges; the
     nested ``tier`` block (budget / resident / host bytes — present when
@@ -72,6 +114,9 @@ def _top_level_gauges(stats: dict, prefix: str = "cubegraph") -> str:
 def render(blob: dict, prefix: str = "cubegraph") -> str:
     """Dispatch on the snapshot shape and render everything it carries."""
     out = []
+    tenants = blob.get("tenants")        # MultiTenantStore.stats()
+    if isinstance(tenants, dict):
+        out.append(tenant_text(tenants, prefix))
     if "obs" in blob:                    # full SegmentManager.stats()
         out.append(_top_level_gauges(blob, prefix))
         blob = blob["obs"]
